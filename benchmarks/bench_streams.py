@@ -1,0 +1,41 @@
+"""Paper Fig 13 analogue: multi-stream / hybrid-architecture design-space
+exploration — latency vs (#s/eStreams, #MU, #VU), normalized to the paper's
+reference point (2 streams, 1 MU, 2 VU)."""
+from __future__ import annotations
+
+from repro.core import compiler, isa, simulator, tiling
+from repro.core.streams import HWConfig
+from repro.gnn import graphs, models
+
+from .common import fmt_table, write_report
+
+
+def run(quick: bool = False):
+    g = graphs.paper_graph("cit-Patents", scale=0.002, seed=0, n_edge_types=3)
+    ts = tiling.grid_tile(g, 8, 8, sparse=True)
+    model_names = ("gat", "sage") if quick else ("gcn", "gat", "sage", "ggnn", "rgcn")
+    rows = []
+    for name in model_names:
+        sde = isa.emit_sde(compiler.compile_gnn(models.trace_named(name)).plan)
+        base = simulator.simulate_model(
+            sde, ts, HWConfig(n_sstreams=2, n_estreams=2, n_mu=1, n_vu=2)).cycles
+        for streams in (2, 4, 8):
+            for n_mu in (1, 2):
+                for n_vu in (2, 4):
+                    r = simulator.simulate_model(
+                        sde, ts, HWConfig(n_sstreams=streams, n_estreams=streams,
+                                          n_mu=n_mu, n_vu=n_vu))
+                    rows.append([name, streams, n_mu, n_vu,
+                                 f"{base/r.cycles:.2f}x",
+                                 f"{r.utilization['MU']:.2f}",
+                                 f"{r.utilization['VU']:.2f}"])
+    headers = ["model", "s/e_streams", "MU", "VU", "speedup_vs_(2,1,2)",
+               "MU_util", "VU_util"]
+    print("== Fig 13: stream/unit design-space exploration ==")
+    print(fmt_table(rows, headers))
+    write_report("bench_streams", {"headers": headers, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig 11 analogue: sparse tiling + reordering vs regular tiling —
+off-chip memory-access reduction and simulated speedup, per model, on the
+cit-Patents-like graph (the paper's Fig 11 dataset)."""
+from __future__ import annotations
+
+from repro.core import compiler, isa, reorder, simulator, tiling
+from repro.gnn import graphs, models
+
+from .common import fmt_table, write_report
+
+
+def run(quick: bool = False):
+    g = graphs.paper_graph("cit-Patents", scale=0.002, seed=0, n_edge_types=3)
+    rows = []
+    model_names = models.PAPER_MODELS[:2] if quick else models.PAPER_MODELS
+    for name in model_names:
+        tr = models.trace_named(name)
+        sde = isa.emit_sde(compiler.compile_gnn(tr).plan)
+        variants = {
+            "regular": tiling.grid_tile(g, 8, 8, sparse=False),
+            "sparse": tiling.grid_tile(g, 8, 8, sparse=True),
+            "sparse+reorder": tiling.grid_tile(reorder.degree_sort(g).graph,
+                                               8, 8, sparse=True),
+        }
+        sims = {k: simulator.simulate_model(sde, t) for k, t in variants.items()}
+        base_read = sims["regular"].offchip_read
+        base_cyc = sims["regular"].cycles
+        rows.append([name,
+                     f"{base_read/1e6:.1f}MB",
+                     f"{base_read/max(sims['sparse'].offchip_read,1):.1f}x",
+                     f"{base_read/max(sims['sparse+reorder'].offchip_read,1):.1f}x",
+                     f"{base_cyc/sims['sparse'].cycles:.2f}x",
+                     f"{base_cyc/sims['sparse+reorder'].cycles:.2f}x"])
+    headers = ["model", "regular_read", "read_reduction_sparse",
+               "read_reduction_sparse+reorder", "speedup_sparse",
+               "speedup_sparse+reorder"]
+    print("== Fig 11: tiling ablation (cit-Patents-like) ==")
+    print(fmt_table(rows, headers))
+    write_report("bench_tiling", {"headers": headers, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict
+
+import jax
+
+REPORTS = pathlib.Path(__file__).resolve().parents[1] / "reports"
+REPORTS.mkdir(exist_ok=True)
+
+#: paper Table-3 datasets at CPU-tractable scale (structure preserved)
+BENCH_GRAPHS = {
+    "ak2010": 0.1,           # 4.5k V / 11k E
+    "coAuthorsDBLP": 0.015,  # 4.5k V / 15k E
+    "cit-Patents": 0.001,    # 3.8k V / 17k E
+    "soc-LiveJournal1": 0.0008,  # 3.9k V / 35k E
+}
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time (s); blocks on jax async dispatch."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def write_report(name: str, payload: Dict):
+    path = REPORTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path
+
+
+def fmt_table(rows, headers) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) for i, h in enumerate(headers)]
+    def line(vals):
+        return "  ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    out = [line(headers), line(["-" * w for w in widths])]
+    out += [line(r) for r in rows]
+    return "\n".join(out)

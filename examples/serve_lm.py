@@ -1,0 +1,72 @@
+"""Serve a small LM with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-1.5b --tokens 16
+
+Runs the reduced config of the chosen architecture on CPU: a batch of
+synthetic prompts is prefetched through ``forward`` (prefill), then decoded
+token-by-token through the KV-cache / recurrent-state ``decode_step`` —
+the same code paths the decode_32k / long_500k dry-run cells lower.
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.common import materialize
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch))
+    mesh = make_host_mesh()
+    params = materialize(jax.random.PRNGKey(0), lm.model_template(cfg),
+                         dtype_override="float32")
+    B, P, N = args.batch, args.prompt_len, args.tokens
+    max_len = P + N
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+
+    cache = materialize(jax.random.PRNGKey(1), lm.cache_template(cfg, B, max_len),
+                        dtype_override="float32")
+    decode = jax.jit(lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos, mesh=mesh))
+
+    # prefill by teacher-forcing the prompt through decode (fills the cache)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for pos in range(P):
+        logits, cache = decode(params, cache, prompts[:, pos:pos + 1],
+                               jnp.asarray(pos, jnp.int32))
+    print(f"prefill {P} tokens x {B} seqs: {time.time()-t0:.2f}s")
+
+    # greedy decode
+    out = []
+    tok = jnp.argmax(logits[:, -1], -1, keepdims=True).astype(jnp.int32)
+    t0 = time.time()
+    for i in range(N):
+        out.append(np.asarray(tok[:, 0]))
+        logits, cache = decode(params, cache, tok, jnp.asarray(P + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1, keepdims=True).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out, 1)
+    print(f"decoded {N} tokens x {B} seqs in {dt:.2f}s "
+          f"({B*N/dt:.1f} tok/s on CPU, reduced config)")
+    print("sampled ids (first seq):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

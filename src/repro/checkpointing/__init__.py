@@ -1,0 +1,1 @@
+from .ckpt import CheckpointManager, save_checkpoint, restore_checkpoint, latest_step  # noqa: F401

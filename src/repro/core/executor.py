@@ -1,0 +1,311 @@
+"""GNN execution engines.
+
+* :func:`run_reference` — whole-graph oracle (the classic programming model,
+  "DGL-functional" semantics): every op over the full vertex/edge tensors.
+  This is both the correctness oracle and the paper's non-tiled baseline.
+* :func:`run_tiled` — faithful ZIPPER execution: phased tile-by-tile
+  processing of the compiled SDE plan.  Source ops run per tile on the
+  (sparse-)compacted source block, edge ops run per tile, gathers accumulate
+  into per-partition destination blocks, destination ops run per partition.
+  Gather barriers split the program into phases (needed e.g. for GAT's edge
+  softmax, whose edge-normalization depends on a per-destination reduction).
+
+The jit/scan-pipelined variant lives in ``core/pipeline.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import compiler as C
+from . import ir as IR
+from . import trace as TR
+from .tiling import TileSet
+from ..gnn.graphs import Graph
+
+Array = Any
+
+_NEG_INF = -1e30  # used instead of -inf so max-reduce stays NaN-free on empty segments
+
+
+# ---------------------------------------------------------------------------
+# shared op semantics
+# ---------------------------------------------------------------------------
+
+def apply_compute(op: str, attrs: Dict, params: Dict[str, Array], args: Sequence[Array]) -> Array:
+    if op == "matmul" or op == "gemv":
+        return args[0] @ params[attrs["weight"]]
+    if op == "bias_add":
+        return args[0] + params[attrs["weight"]]
+    if op == "bmm_edge":
+        x, et = args
+        w = params[attrs["weight"]]  # (n_types, d_in, d_out)
+        sel = w[et[..., 0].astype(jnp.int32)]
+        return jnp.einsum("ef,efo->eo", x, sel)
+    if op == "add":
+        return args[0] + args[1]
+    if op == "sub":
+        return args[0] - args[1]
+    if op == "mul":
+        return args[0] * args[1]
+    if op == "div":
+        return args[0] / args[1]
+    if op == "max2":
+        return jnp.maximum(args[0], args[1])
+    if op == "min2":
+        return jnp.minimum(args[0], args[1])
+    if op == "relu":
+        return jax.nn.relu(args[0])
+    if op == "leaky_relu":
+        return jnp.where(args[0] > 0, args[0], attrs.get("slope", 0.2) * args[0])
+    if op == "exp":
+        return jnp.exp(args[0])
+    if op == "sigmoid":
+        return jax.nn.sigmoid(args[0])
+    if op == "tanh":
+        return jnp.tanh(args[0])
+    if op == "neg":
+        return -args[0]
+    if op == "identity":
+        return args[0]
+    if op == "sqrt":
+        return jnp.sqrt(args[0])
+    if op == "rsqrt":
+        return jax.lax.rsqrt(args[0])
+    raise NotImplementedError(op)
+
+
+# ---------------------------------------------------------------------------
+# whole-graph reference (oracle / non-tiled baseline)
+# ---------------------------------------------------------------------------
+
+def run_reference(tr: TR.GnnTrace, graph: Graph, inputs: Dict[str, Array],
+                  params: Dict[str, Array]) -> List[Array]:
+    src = jnp.asarray(graph.src)
+    dst = jnp.asarray(graph.dst)
+    V = graph.n_vertices
+    env: Dict[int, Array] = {}
+    outs: List[Array] = []
+    for n in tr.nodes:
+        if n.op == "param":
+            continue
+        if n.op == "input":
+            env[n.id] = jnp.asarray(inputs[n.attrs["name"]])
+        elif n.op == "output":
+            outs.append(env[n.inputs[0]])
+        elif n.op == "scatter_src":
+            env[n.id] = env[n.inputs[0]][src]
+        elif n.op == "scatter_dst":
+            env[n.id] = env[n.inputs[0]][dst]
+        elif n.op == "gather":
+            e = env[n.inputs[0]]
+            red = n.attrs["reduce"]
+            if red == "sum":
+                env[n.id] = jax.ops.segment_sum(e, dst, num_segments=V)
+            elif red == "max":
+                m = jax.ops.segment_max(e, dst, num_segments=V)
+                env[n.id] = jnp.maximum(m, _NEG_INF)  # empty segments -> -1e30 not -inf
+            elif red == "mean":
+                s = jax.ops.segment_sum(e, dst, num_segments=V)
+                c = jax.ops.segment_sum(jnp.ones((e.shape[0], 1), e.dtype), dst, num_segments=V)
+                env[n.id] = s / jnp.maximum(c, 1.0)
+            else:
+                raise ValueError(red)
+        elif n.op in ("matmul", "gemv", "bias_add"):
+            w = tr.node(n.inputs[1])
+            env[n.id] = apply_compute(n.op, {"weight": w.attrs["name"]}, params, [env[n.inputs[0]]])
+        elif n.op == "bmm_edge":
+            w = tr.node(n.inputs[1])
+            env[n.id] = apply_compute("bmm_edge", {"weight": w.attrs["name"]}, params,
+                                      [env[n.inputs[0]], env[n.inputs[2]]])
+        else:
+            env[n.id] = apply_compute(n.op, n.attrs, params, [env[i] for i in n.inputs])
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# tiled ZIPPER execution
+# ---------------------------------------------------------------------------
+
+class _TiledRun:
+    def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
+                 inputs: Dict[str, Array], params: Dict[str, Array]):
+        self.c = compiled
+        self.prog = compiled.ir
+        self.plan = compiled.plan
+        self.graph = graph
+        self.tiles = tiles
+        self.params = params
+        self.prog.rebuild_channels()
+        self.send_of_comm = {cid: snid for cid, (_, snid, _, _) in self.prog.channels.items()}
+        self.node_seg: Dict[int, IR.Segment] = {}
+        self.nodes: Dict[int, IR.IRNode] = {}
+        for seg in self.prog.segments:
+            for n in seg.nodes.values():
+                self.nodes[n.id] = n
+                self.node_seg[n.id] = seg
+        # global (V, dim) store: inputs, gather results, dst-computed values
+        self.vstore: Dict[int, Array] = {}
+        # global (E, dim) store for edge inputs
+        self.estore: Dict[int, Array] = {}
+        for seg in self.prog.segments:
+            for n in seg.nodes.values():
+                if n.op == "input":
+                    val = jnp.asarray(inputs[n.attrs["name"]])
+                    if seg.kind == "vertex":
+                        self.vstore[n.id] = val
+                    else:
+                        self.estore[n.id] = val
+
+    # -- per-tile source-side evaluation ------------------------------------
+    def _eval_vertex_rows(self, rows: Array, lvl: int, roles: Sequence[str],
+                          store: bool = False, valid: Optional[Array] = None) -> Dict[int, Array]:
+        """Evaluate vertex-segment compute nodes for the given vertex rows.
+
+        roles: which replica(s) to evaluate ('src' per tile / 'dst' per part).
+        store=True writes level==lvl results back into the global vstore
+        (destination replica).  Returns the local env.
+        """
+        env: Dict[int, Array] = {}
+
+        def lookup(nid: int) -> Array:
+            if nid in env:
+                return env[nid]
+            if nid in self.vstore:
+                return self.vstore[nid][rows]
+            raise KeyError(f"vertex value %{nid} unavailable")
+
+        for seg in self.prog.vertex_segments():
+            for n in seg.toposort():
+                if self.plan.level[n.id] > lvl:
+                    continue
+                if n.op in ("input", "recvInEdge"):
+                    continue  # read lazily via lookup
+                if n.is_send():
+                    continue
+                if not (self.plan.role[n.id] & set(roles)) and n.op != "output":
+                    continue
+                if n.op == "output":
+                    if "dst" not in roles or self.plan.level[n.id] != lvl:
+                        continue
+                    env[n.id] = lookup(n.inputs[0])
+                else:
+                    env[n.id] = apply_compute(n.op, n.attrs, self.params,
+                                              [lookup(i) for i in n.inputs])
+                if store and self.plan.level[n.id] == lvl and (
+                        "dst" in self.plan.role[n.id] or n.op == "output"):
+                    if n.id not in self.vstore:
+                        self.vstore[n.id] = jnp.zeros((self.graph.n_vertices, env[n.id].shape[-1]),
+                                                      env[n.id].dtype)
+                    self.vstore[n.id] = self.vstore[n.id].at[rows].set(env[n.id])
+        return env
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> List[Array]:
+        t = self.tiles
+        plan = self.plan
+        V = self.graph.n_vertices
+        for lvl in range(plan.max_level + 1):
+            # 1. destination/partition-scope ops at this level
+            for p in range(t.n_dst_parts):
+                lo = int(t.part_start[p]); n = int(t.part_size[p])
+                rows = jnp.arange(lo, lo + n)
+                self._eval_vertex_rows(rows, lvl, roles=("dst",), store=True)
+
+            # does this level have tile-scope work?
+            edge_lvl_nodes = [n for seg in self.prog.edge_segments()
+                              for n in seg.toposort() if plan.level[n.id] == lvl]
+            if not edge_lvl_nodes:
+                continue
+
+            # 2. gather accumulators for this level
+            acc_sum: Dict[int, Array] = {}
+            acc_max: Dict[int, Array] = {}
+            acc_cnt: Dict[int, Array] = {}
+            gather_sends = [n for n in self.nodes.values()
+                            if n.op.startswith("sendDst") and plan.level[n.id] == lvl]
+            for s in gather_sends:
+                if s.op in ("sendDstSum", "sendDstMean"):
+                    acc_sum[s.comm_id] = jnp.zeros((V, s.dim), jnp.float32)
+                    if s.op == "sendDstMean":
+                        acc_cnt[s.comm_id] = jnp.zeros((V, 1), jnp.float32)
+                else:
+                    acc_max[s.comm_id] = jnp.full((V, s.dim), _NEG_INF, jnp.float32)
+
+            # 3. tile loop
+            for ti in range(t.n_tiles):
+                ns, ne = int(t.n_src[ti]), int(t.n_edge[ti])
+                if ne == 0:
+                    continue
+                p = int(t.part_id[ti])
+                src_rows = jnp.asarray(t.src_ids[ti, :ns])
+                esrc = jnp.asarray(t.edge_src[ti, :ne])
+                edst_local = jnp.asarray(t.edge_dst[ti, :ne])
+                edst_global = edst_local + int(t.part_start[p])
+                egid = jnp.asarray(t.edge_gid[ti, :ne])
+
+                senv = self._eval_vertex_rows(src_rows, lvl, roles=("src",))
+
+                eenv: Dict[int, Array] = {}
+
+                def elookup(nid: int) -> Array:
+                    if nid in eenv:
+                        return eenv[nid]
+                    if nid in self.estore:
+                        return self.estore[nid][egid]
+                    raise KeyError(f"edge value %{nid} unavailable")
+
+                for seg in self.prog.edge_segments():
+                    for n in seg.toposort():
+                        # values of lower levels are recomputed every pass over
+                        # the tiles (each phase re-loads and re-scatters);
+                        # gather accumulation only happens at its own level.
+                        if plan.level[n.id] > lvl:
+                            continue
+                        if n.op == "recvSrc":
+                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
+                            if src_nid in senv:
+                                eenv[n.id] = senv[src_nid][esrc]
+                            else:
+                                eenv[n.id] = self.vstore[src_nid][src_rows][esrc]
+                        elif n.op == "recvDst":
+                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
+                            eenv[n.id] = self.vstore[src_nid][edst_global]
+                        elif n.op == "input":
+                            continue  # lazy via elookup
+                        elif n.is_send():
+                            if plan.level[n.id] != lvl:
+                                continue  # gathers accumulate only at their own phase
+                            val = elookup(n.inputs[0])
+                            if n.op in ("sendDstSum", "sendDstMean"):
+                                acc_sum[n.comm_id] = acc_sum[n.comm_id].at[edst_global].add(val)
+                                if n.op == "sendDstMean":
+                                    acc_cnt[n.comm_id] = acc_cnt[n.comm_id].at[edst_global].add(
+                                        jnp.ones((val.shape[0], 1), jnp.float32))
+                            elif n.op.startswith("sendDst"):
+                                acc_max[n.comm_id] = acc_max[n.comm_id].at[edst_global].max(val)
+                        else:
+                            eenv[n.id] = apply_compute(n.op, n.attrs, self.params,
+                                                       [elookup(i) for i in n.inputs])
+
+            # 4. publish gather results for the next level
+            for s in gather_sends:
+                _, _, rsi, rnid = self.prog.channels[s.comm_id]
+                if s.op == "sendDstSum":
+                    self.vstore[rnid] = acc_sum[s.comm_id]
+                elif s.op == "sendDstMean":
+                    self.vstore[rnid] = acc_sum[s.comm_id] / jnp.maximum(acc_cnt[s.comm_id], 1.0)
+                else:
+                    self.vstore[rnid] = acc_max[s.comm_id]
+
+        # outputs, in id order (== declaration order)
+        outs = sorted((n for n in self.nodes.values() if n.op == "output"), key=lambda n: n.id)
+        return [self.vstore[o.id] for o in outs]
+
+
+def run_tiled(compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
+              inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
+    return _TiledRun(compiled, graph, tiles, inputs, params).run()

@@ -1,0 +1,161 @@
+"""ZIPPER ISA (paper Table 2) and SDE-function code generation.
+
+Three instruction classes:
+  * computational — ELW (VU), GEMM/BMM (MU), GOP scatter/gather (VU)
+  * data-transfer — LD.SRC / LD.DST / LD.EDGE / ST.DST (memory controller)
+  * synchronization — SIGNAL / WAIT / FCH.TILE / FCH.PTT / UPD.PTT / CHK.PTT
+
+Instructions are coarse-grained: one instruction operates on all vertices or
+edges of a tile (paper §6.1 "ISA").  Codegen lowers an :class:`SDEPlan` into
+per-(role, phase) instruction *templates*; row counts (n_src / n_edge /
+partition size) are bound per tile by the scheduler / simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from . import ir as IR
+from .compiler import SDEPlan
+from . import passes
+
+#: dispatch overhead charged per instruction (decoder + operand setup), cycles
+DISPATCH_CYCLES = 8
+
+_ELW_OPCODE = {
+    "add": "ELW.ADD", "sub": "ELW.SUB", "mul": "ELW.MUL", "div": "ELW.DIV",
+    "max2": "ELW.MAX", "min2": "ELW.MIN", "exp": "ELW.EXP", "relu": "ELW.RELU",
+    "leaky_relu": "ELW.LRELU", "sigmoid": "ELW.SIG", "tanh": "ELW.TANH",
+    "neg": "ELW.NEG", "identity": "ELW.CPY", "sqrt": "ELW.SQRT",
+    "rsqrt": "ELW.RSQRT", "bias_add": "ELW.ADDB",
+}
+_GOP_OPCODE = {
+    "recvSrc": "SCTR.OUTE", "recvDst": "SCTR.INE",
+    "sendDstSum": "GTHR.DST.SUM", "sendDstMax": "GTHR.DST.MAX",
+    "sendDstMean": "GTHR.DST.SUM",  # mean = sum + count (extra ELW.DIV emitted)
+}
+
+
+@dataclasses.dataclass
+class Instr:
+    opcode: str
+    unit: str            # 'MU' | 'VU' | 'MEM' | 'CTRL'
+    rows: str = ""       # symbolic row count: 'n_src' | 'n_edge' | 'n_dst'
+    k: int = 0           # inner dim (GEMM/GEMV)
+    n: int = 1           # output feature dim / ELW width
+    weight_bytes: int = 0  # weight-buffer traffic (GEMM/BMM)
+    fused: int = 1       # number of IR ops folded into this instruction
+    tag: str = ""
+
+    def bound(self, n_src: int, n_edge: int, n_dst: int) -> Tuple[int, int, int]:
+        m = {"n_src": n_src, "n_edge": n_edge, "n_dst": n_dst, "": 0}[self.rows]
+        return m, self.k, self.n
+
+
+def _compute_instr(node: IR.IRNode, rows: str) -> Instr:
+    if node.op == "matmul":
+        k, n = node.attrs["wshape"][-2], node.attrs["wshape"][-1]
+        return Instr("GEMM", "MU", rows, k=k, n=n, weight_bytes=4 * k * n, tag=node.op)
+    if node.op == "bmm_edge":
+        k, n = node.attrs["wshape"][-2], node.attrs["wshape"][-1]
+        # index-guided BMM: per-row weight select defeats weight-stationarity
+        return Instr("BMM", "MU", rows, k=k, n=n, weight_bytes=4 * k * n, tag=node.op)
+    if node.op == "gemv":
+        # matrix-vector runs on the VU (paper Table 2 lists GEMV under ELW)
+        return Instr("GEMV", "VU", rows, k=node.attrs["wshape"][0], n=1, tag=node.op)
+    return Instr(_ELW_OPCODE[node.op], "VU", rows, n=node.dim, tag=node.op)
+
+
+@dataclasses.dataclass
+class SDEFunctions:
+    """Instruction templates per (role, phase-level).
+
+    roles: 's' (source / per tile), 'e' (edge / per tile),
+           'd' (destination / per partition; includes pre- and post-gather ops)
+    """
+
+    s: Dict[int, List[Instr]]
+    e: Dict[int, List[Instr]]
+    d: Dict[int, List[Instr]]
+    src_load_dim: int   # feature width loaded per source vertex
+    dst_load_dim: int   # feature width loaded per destination vertex
+    edge_feat_dim: int  # per-edge input feature width (etype / efeat)
+    out_dim: int        # stored output width per destination vertex
+    max_level: int
+
+    def all_levels(self):
+        return range(self.max_level + 1)
+
+
+def emit_sde(plan: SDEPlan, fuse: bool = True) -> SDEFunctions:
+    prog = plan.prog
+    fusion_nodes: Dict[int, int] = {}  # node id -> fusion group leader id
+    if fuse:
+        for group in passes.fuse_elementwise(prog):
+            for nid in group:
+                fusion_nodes[nid] = group[0]
+
+    s: Dict[int, List[Instr]] = {}
+    e: Dict[int, List[Instr]] = {}
+    d: Dict[int, List[Instr]] = {}
+
+    def _push(bucket: Dict[int, List[Instr]], lvl: int, instr: Instr):
+        bucket.setdefault(lvl, []).append(instr)
+
+    src_load_dim = dst_load_dim = edge_feat_dim = out_dim = 0
+    for seg in prog.segments:
+        for node in seg.toposort():
+            lvl = plan.level[node.id]
+            if node.op == "input":
+                if seg.kind == "vertex":
+                    roles = plan.role[node.id]
+                    if "src" in roles:
+                        src_load_dim += node.dim
+                    if "dst" in roles:
+                        dst_load_dim += node.dim
+                else:
+                    edge_feat_dim += node.dim
+                continue
+            if node.op == "output":
+                out_dim += node.dim
+                continue
+            if seg.kind == "edge":
+                if node.is_recv():
+                    _push(e, lvl, Instr(_GOP_OPCODE[node.op], "VU", "n_edge", n=node.dim, tag=node.op))
+                elif node.is_send():
+                    _push(e, lvl, Instr(_GOP_OPCODE[node.op], "VU", "n_edge", n=node.dim, tag=node.op))
+                    if node.op == "sendDstMean":
+                        _push(d, lvl + 1, Instr("ELW.DIV", "VU", "n_dst", n=node.dim, tag="mean-div"))
+                else:
+                    _push(e, lvl, _compute_instr(node, "n_edge"))
+            else:
+                if node.is_send() or node.is_recv():
+                    continue  # vertex-side comm is realized by the edge SCTR/GTHR
+                roles = plan.role[node.id]
+                if "src" in roles:
+                    _push(s, lvl, _compute_instr(node, "n_src"))
+                if "dst" in roles:
+                    _push(d, lvl, _compute_instr(node, "n_dst"))
+
+    # element-wise fusion: collapse adjacent VU ELW instrs that came from one
+    # fusion group into a single instruction (saves dispatch overhead)
+    if fuse:
+        for bucket in (s, e, d):
+            for lvl, instrs in bucket.items():
+                fused: List[Instr] = []
+                for ins in instrs:
+                    if (fused and ins.unit == "VU" and fused[-1].unit == "VU"
+                            and ins.opcode.startswith("ELW") and fused[-1].opcode.startswith("ELW")
+                            and ins.rows == fused[-1].rows):
+                        fused[-1] = dataclasses.replace(
+                            fused[-1], fused=fused[-1].fused + 1,
+                            n=fused[-1].n + ins.n,  # lane-work adds up
+                            opcode="ELW.FUSED", tag=fused[-1].tag + "+" + ins.tag)
+                    else:
+                        fused.append(ins)
+                bucket[lvl] = fused
+
+    return SDEFunctions(s=s, e=e, d=d,
+                        src_load_dim=src_load_dim, dst_load_dim=dst_load_dim,
+                        edge_feat_dim=edge_feat_dim, out_dim=out_dim,
+                        max_level=plan.max_level)

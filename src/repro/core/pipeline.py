@@ -1,0 +1,228 @@
+"""Inter-tile pipelined execution in JAX (paper Fig 4c, adapted).
+
+On the ZIPPER ASIC, tile pipelining comes from multiple hardware streams.
+On TPU/XLA there is one instruction stream per core, but the same effect —
+tile *t+1*'s data movement overlapped with tile *t*'s compute — falls out of
+(a) ``lax.scan`` over the padded tile batch, which XLA software-pipelines,
+and (b) the fused Pallas tile kernel (``kernels/tile_spmm``), whose grid
+pipelining double-buffers the HBM→VMEM DMA against the MXU.
+
+This module is the scan-based engine: one jit-compiled function per
+(compiled model × tile-set shape).  It is numerically identical to
+``executor.run_tiled`` (the python-loop reference) and is what the GNN
+benchmarks execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import compiler as C
+from . import ir as IR
+from .executor import apply_compute, _NEG_INF
+from .tiling import TileSet
+from ..gnn.graphs import Graph
+
+Array = Any
+
+
+def _padded_partition_ids(tiles: TileSet) -> Tuple[np.ndarray, int]:
+    """(P, Dmax) global vertex ids per partition row; invalid slots -> V."""
+    P = tiles.n_dst_parts
+    dmax = int(tiles.part_size.max())
+    V = tiles.n_vertices
+    ids = np.full((P, dmax), V, dtype=np.int32)
+    for p in range(P):
+        n = int(tiles.part_size[p])
+        ids[p, :n] = tiles.part_start[p] + np.arange(n, dtype=np.int32)
+    return ids, dmax
+
+
+class PipelinedRunner:
+    """Builds and jits the scan-pipelined executor for one compiled model."""
+
+    def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
+                 tile_kernel: Callable | None = None):
+        self.c = compiled
+        self.prog = compiled.ir
+        self.plan = compiled.plan
+        self.graph = graph
+        self.tiles = tiles
+        self.tile_kernel = tile_kernel
+        self.prog.rebuild_channels()
+        self.send_of_comm = {cid: snid for cid, (_, snid, _, _) in self.prog.channels.items()}
+        self.nodes: Dict[int, IR.IRNode] = {}
+        self.node_seg: Dict[int, IR.Segment] = {}
+        for seg in self.prog.segments:
+            for n in seg.nodes.values():
+                self.nodes[n.id] = n
+                self.node_seg[n.id] = seg
+        self.part_ids_pad, self.dmax = _padded_partition_ids(tiles)
+        self._jitted = jax.jit(self._run)
+
+    # ------------------------------------------------------------------ run
+    def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
+        t = self.tiles
+        tile_arrays = dict(
+            src_ids=jnp.asarray(t.src_ids), edge_src=jnp.asarray(t.edge_src),
+            edge_dst=jnp.asarray(t.edge_dst), edge_gid=jnp.asarray(t.edge_gid),
+            n_src=jnp.asarray(t.n_src), n_edge=jnp.asarray(t.n_edge),
+            part_id=jnp.asarray(t.part_id), part_start=jnp.asarray(t.part_start),
+        )
+        return self._jitted({k: jnp.asarray(v) for k, v in inputs.items()},
+                            {k: jnp.asarray(v) for k, v in params.items()},
+                            tile_arrays)
+
+    # ---------------------------------------------------------- trace-time
+    def _run(self, inputs, params, ta) -> List[Array]:
+        plan, prog = self.plan, self.prog
+        V = self.graph.n_vertices
+        P, dmax = self.tiles.n_dst_parts, self.dmax
+        pad_ids = jnp.asarray(self.part_ids_pad)          # (P, Dmax), V = invalid
+        pad_valid = (pad_ids < V)[..., None]              # (P, Dmax, 1)
+        safe_pad_ids = jnp.minimum(pad_ids, V - 1)
+
+        vstore: Dict[int, Array] = {}
+        estore: Dict[int, Array] = {}
+        for seg in prog.segments:
+            for n in seg.nodes.values():
+                if n.op == "input":
+                    (vstore if seg.kind == "vertex" else estore)[n.id] = inputs[n.attrs["name"]]
+
+        def eval_vertex(rows, lvl, roles, on_parts=False):
+            """rows: indices (per-tile (S,) or padded (P,Dmax)); returns env."""
+            env: Dict[int, Array] = {}
+
+            def lookup(nid):
+                if nid in env:
+                    return env[nid]
+                return vstore[nid][rows]
+
+            for seg in prog.vertex_segments():
+                for n in seg.toposort():
+                    if plan.level[n.id] > lvl or n.op in ("input", "recvInEdge") or n.is_send():
+                        continue
+                    if n.op == "output":
+                        if "dst" in roles and plan.level[n.id] <= lvl:
+                            env[n.id] = lookup(n.inputs[0])
+                        continue
+                    if not (plan.role[n.id] & set(roles)):
+                        continue
+                    env[n.id] = apply_compute(n.op, n.attrs, params,
+                                              [lookup(i) for i in n.inputs])
+            return env
+
+        def scatter_back(env, lvl):
+            """Write dst-replica results (padded (P,Dmax,d)) into (V,d) stores."""
+            for nid, val in env.items():
+                n = self.nodes[nid]
+                if plan.level[nid] != lvl:
+                    continue
+                if not ("dst" in plan.role[nid] or n.op == "output"):
+                    continue
+                flat = jnp.where(pad_valid, val, 0.0).reshape(P * dmax, -1)
+                buf = jnp.zeros((V + 1, flat.shape[-1]), flat.dtype)
+                buf = buf.at[pad_ids.reshape(-1)].set(flat)  # invalid rows -> sentinel V
+                vstore[nid] = buf[:V]
+
+        for lvl in range(plan.max_level + 1):
+            # ---- destination/partition scope (vectorized over partitions)
+            denv = eval_vertex(safe_pad_ids, lvl, roles=("dst",), on_parts=True)
+            scatter_back(denv, lvl)
+
+            edge_nodes = [n for seg in prog.edge_segments() for n in seg.toposort()
+                          if plan.level[n.id] <= lvl]
+            gather_sends = [n for n in self.nodes.values()
+                            if n.op.startswith("sendDst") and plan.level[n.id] == lvl]
+            if not any(plan.level[n.id] == lvl for n in edge_nodes):
+                continue
+
+            # ---- accumulators
+            acc0: Dict[str, Array] = {}
+            for s in gather_sends:
+                if s.op in ("sendDstSum", "sendDstMean"):
+                    acc0[f"sum{s.comm_id}"] = jnp.zeros((P, dmax, s.dim), jnp.float32)
+                    if s.op == "sendDstMean":
+                        acc0[f"cnt{s.comm_id}"] = jnp.zeros((P, dmax, 1), jnp.float32)
+                else:
+                    acc0[f"max{s.comm_id}"] = jnp.full((P, dmax, s.dim), _NEG_INF, jnp.float32)
+
+            # ---- the pipelined tile loop
+            def body(acc, xs):
+                src_rows = xs["src_ids"]                       # (S,)
+                esrc, edst = xs["edge_src"], xs["edge_dst"]    # (E,)
+                emask = (jnp.arange(esrc.shape[0]) < xs["n_edge"])[:, None]
+                pid = xs["part_id"]
+                dst_global = jnp.minimum(xs["part_start_row"] + edst, V - 1)
+
+                senv = eval_vertex(src_rows, lvl, roles=("src",))
+                eenv: Dict[int, Array] = {}
+
+                def elookup(nid):
+                    if nid in eenv:
+                        return eenv[nid]
+                    return estore[nid][xs["edge_gid"]]
+
+                for n in edge_nodes:
+                    if n.op == "recvSrc":
+                        src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
+                        base = senv[src_nid] if src_nid in senv else vstore[src_nid][src_rows]
+                        eenv[n.id] = base[esrc]
+                    elif n.op == "recvDst":
+                        src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
+                        eenv[n.id] = vstore[src_nid][dst_global]
+                    elif n.op == "input":
+                        continue
+                    elif n.is_send():
+                        if plan.level[n.id] != lvl:
+                            continue
+                        val = elookup(n.inputs[0])
+                        if n.op in ("sendDstSum", "sendDstMean"):
+                            contrib = jax.ops.segment_sum(
+                                jnp.where(emask, val, 0.0), edst, num_segments=dmax)
+                            acc[f"sum{n.comm_id}"] = acc[f"sum{n.comm_id}"].at[pid].add(contrib)
+                            if n.op == "sendDstMean":
+                                c = jax.ops.segment_sum(
+                                    jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
+                                acc[f"cnt{n.comm_id}"] = acc[f"cnt{n.comm_id}"].at[pid].add(c[:, None])
+                        else:
+                            m = jax.ops.segment_max(
+                                jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
+                            m = jnp.maximum(m, _NEG_INF)
+                            acc[f"max{n.comm_id}"] = acc[f"max{n.comm_id}"].at[pid].max(m)
+                    else:
+                        eenv[n.id] = apply_compute(n.op, n.attrs, params,
+                                                   [elookup(i) for i in n.inputs])
+                return acc, 0
+
+            xs = dict(src_ids=ta["src_ids"], edge_src=ta["edge_src"],
+                      edge_dst=ta["edge_dst"], edge_gid=ta["edge_gid"],
+                      n_edge=ta["n_edge"], part_id=ta["part_id"],
+                      part_start_row=ta["part_start"][ta["part_id"]])
+            acc, _ = jax.lax.scan(body, acc0, xs)
+
+            # ---- publish gather results (padded (P,Dmax) -> (V,))
+            for s in gather_sends:
+                _, _, _, rnid = prog.channels[s.comm_id]
+                if s.op == "sendDstSum":
+                    val = acc[f"sum{s.comm_id}"]
+                elif s.op == "sendDstMean":
+                    val = acc[f"sum{s.comm_id}"] / jnp.maximum(acc[f"cnt{s.comm_id}"], 1.0)
+                else:
+                    val = acc[f"max{s.comm_id}"]
+                flat = jnp.where(pad_valid, val, 0.0).reshape(P * dmax, -1)
+                buf = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
+                buf = buf.at[pad_ids.reshape(-1)].set(flat)
+                vstore[rnid] = buf[:V]
+
+        outs = sorted((n for n in self.nodes.values() if n.op == "output"), key=lambda n: n.id)
+        return [vstore[o.id] for o in outs]
+
+
+def run_pipelined(compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
+                  inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
+    return PipelinedRunner(compiled, graph, tiles)(inputs, params)

@@ -1,0 +1,202 @@
+"""Event-driven, cycle-approximate simulator of the ZIPPER architecture
+(paper §7, §8.1 "Performance Simulation").
+
+Executes the stream task DAG from :mod:`repro.core.streams` against the
+hardware resources: ``n_mu`` Matrix Units, ``n_vu`` Vector Units, one HBM
+channel, and the s/e stream slots.  The two-level scheduling of the paper is
+reproduced: a first-ready-first-serve scheduler admits tasks into stream
+slots; a dispatcher issues each task's instructions to a free target unit
+(FIFO per unit class).
+
+Outputs: total cycles, per-unit busy cycles (utilization), off-chip traffic,
+and the energy/area models of §8.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from .isa import Instr
+from .streams import HWConfig, Task, build_task_graph, instr_cycles
+from .isa import SDEFunctions
+from .tiling import TileSet
+
+# ---------------------------------------------------------------------------
+# energy / area constants (paper §8.1 methodology)
+# ---------------------------------------------------------------------------
+
+ENERGY = {
+    "mac_pj": 0.56,          # per MAC, 16 nm systolic synthesis class
+    "vu_op_pj": 0.12,        # per SIMD lane-op
+    "uem_pj_per_byte": 0.35, # eDRAM access (Cacti 6.5, converted to 16 nm)
+    "th_pj_per_byte": 0.11,  # SRAM tile hub
+    "offchip_pj_per_bit": 7.0,  # paper: 7 pJ/bit HBM
+}
+
+AREA_MM2 = {"MU": 1.00, "VU": 0.06, "UEM": 52.31, "TH": 0.15}  # paper Table 5
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    time_ms: float
+    unit_busy: Dict[str, int]
+    utilization: Dict[str, float]
+    offchip_read: int
+    offchip_write: int
+    macs: int
+    elw_ops: int
+    energy_mj: float
+    n_tasks: int
+
+    def speedup_over(self, other: "SimResult") -> float:
+        return other.time_ms / self.time_ms
+
+
+def area_mm2(hw: HWConfig) -> float:
+    """Paper Table 5 composition for an arbitrary unit count."""
+    return (AREA_MM2["MU"] * hw.n_mu + AREA_MM2["VU"] * hw.n_vu
+            + AREA_MM2["UEM"] * hw.uem_mbytes / 21.0 + AREA_MM2["TH"])
+
+
+def _energy_mj(stats: Dict[str, int], hw: HWConfig) -> float:
+    onchip_bytes = (stats["macs"] * 2 + stats["elw_ops"] * 2) * hw.dtype_bytes
+    pj = (stats["macs"] * ENERGY["mac_pj"]
+          + stats["elw_ops"] * ENERGY["vu_op_pj"]
+          + onchip_bytes * ENERGY["uem_pj_per_byte"]
+          + (stats["offchip_read"] + stats["offchip_write"]) * 8 * ENERGY["offchip_pj_per_bit"])
+    return pj * 1e-9  # pJ -> mJ
+
+
+def simulate(tasks: List[Task], stats: Dict[str, int], hw: HWConfig) -> SimResult:
+    """Discrete-event simulation with unit contention and stream slots."""
+    n_tasks = len(tasks)
+    indeg = [0] * n_tasks
+    succs: List[List[int]] = [[] for _ in range(n_tasks)]
+    for t in tasks:
+        for d in t.deps:
+            indeg[t.tid] += 1
+            succs[d].append(t.tid)
+
+    # resources: unit -> free count
+    free = {"MU": hw.n_mu, "VU": hw.n_vu, "MEM": 1, "CTRL": 1 << 30}
+    slots = {"s": hw.n_sstreams, "e": hw.n_estreams, "d": 1}
+    busy = {"MU": 0, "VU": 0, "MEM": 0, "CTRL": 0}
+
+    # per-task instruction programs: list of (unit, cycles)
+    progs: List[List[Tuple[str, int]]] = []
+    for t in tasks:
+        prog: List[Tuple[str, int]] = []
+        if t.bytes_in:
+            prog.append(("MEM", max(1, int(t.bytes_in / hw.hbm_bytes_per_cycle))))
+        for ins, m, k, n in t.instrs:
+            ins2 = dataclasses.replace(ins, k=k, n=n)
+            cyc = instr_cycles(ins2, m, hw)
+            if cyc:
+                prog.append((ins.unit, cyc))
+        if t.bytes_out:
+            prog.append(("MEM", max(1, int(t.bytes_out / hw.hbm_bytes_per_cycle))))
+        if not prog:
+            prog.append(("CTRL", 1))
+        progs.append(prog)
+
+    # event heap: (time, seq, kind, payload)
+    heap: List[Tuple[int, int, str, tuple]] = []
+    seq = 0
+    ready_q: Dict[str, List[int]] = {"s": [], "e": [], "d": []}   # awaiting a stream slot
+    unit_q: Dict[str, List[Tuple[int, int]]] = {u: [] for u in free}  # (task, pc) awaiting unit
+    pc = [0] * n_tasks
+
+    def admit(tid_: int, now: int):
+        """Try to put a ready task into a stream slot."""
+        k = tasks[tid_].kind
+        if slots[k] > 0:
+            slots[k] -= 1
+            issue(tid_, now)
+        else:
+            ready_q[k].append(tid_)
+
+    def issue(tid_: int, now: int):
+        """Dispatch the task's next instruction to its unit (or queue)."""
+        nonlocal seq
+        unit, cyc = progs[tid_][pc[tid_]]
+        if free[unit] > 0:
+            free[unit] -= 1
+            busy[unit] += cyc
+            heapq.heappush(heap, (now + cyc, seq, "instr_done", (tid_, unit, cyc)))
+            seq += 1
+        else:
+            unit_q[unit].append((tid_, pc[tid_]))
+
+    now = 0
+    for t in tasks:
+        if indeg[t.tid] == 0:
+            admit(t.tid, 0)
+
+    completed = 0
+    while heap:
+        now, _, ev, payload = heapq.heappop(heap)
+        if ev != "instr_done":
+            continue
+        tid_, unit, _cyc = payload
+        free[unit] += 1
+        # feed a queued instruction into the freed unit (first-ready-first-serve)
+        if unit_q[unit]:
+            qtid, _qpc = unit_q[unit].pop(0)
+            free[unit] -= 1
+            u2, cyc2 = progs[qtid][pc[qtid]]
+            assert u2 == unit
+            busy[unit] += cyc2
+            heapq.heappush(heap, (now + cyc2, 1 << 20, "instr_done", (qtid, unit, cyc2)))
+        pc[tid_] += 1
+        if pc[tid_] < len(progs[tid_]):
+            issue(tid_, now)
+            continue
+        # task complete: release stream slot, wake dependents
+        completed += 1
+        k = tasks[tid_].kind
+        slots[k] += 1
+        if ready_q[k]:
+            admit(ready_q[k].pop(0), now)
+        for s2 in succs[tid_]:
+            indeg[s2] -= 1
+            if indeg[s2] == 0:
+                admit(s2, now)
+
+    assert completed == n_tasks, f"deadlock: {completed}/{n_tasks} tasks done"
+    total = max(now, 1)
+    n_inst = {"MU": hw.n_mu, "VU": hw.n_vu, "MEM": 1}
+    util = {u: busy[u] / (total * n_inst[u]) for u in ("MU", "VU", "MEM")}
+    return SimResult(
+        cycles=total,
+        time_ms=total / (hw.freq_ghz * 1e6),
+        unit_busy=dict(busy),
+        utilization=util,
+        offchip_read=stats["offchip_read"],
+        offchip_write=stats["offchip_write"],
+        macs=stats["macs"],
+        elw_ops=stats["elw_ops"],
+        energy_mj=_energy_mj(stats, hw),
+        n_tasks=n_tasks,
+    )
+
+
+def simulate_model(sde: SDEFunctions, tiles: TileSet,
+                   hw: Optional[HWConfig] = None) -> SimResult:
+    hw = hw or HWConfig()
+    tasks, stats = build_task_graph(sde, tiles, hw)
+    return simulate(tasks, stats, hw)
+
+
+def serialized_baseline(sde: SDEFunctions, tiles: TileSet,
+                        hw: Optional[HWConfig] = None) -> SimResult:
+    """Non-pipelined tiling baseline (paper Fig 4b): one stream of each kind,
+    so tiles are processed strictly one after another."""
+    hw = (hw or HWConfig()).scaled(n_sstreams=1, n_estreams=1)
+    tasks, stats = build_task_graph(sde, tiles, hw)
+    # serialize: chain every task after the previous one
+    for i in range(1, len(tasks)):
+        if i - 1 not in tasks[i].deps:
+            tasks[i].deps.append(i - 1)
+    return simulate(tasks, stats, hw)

@@ -1,0 +1,160 @@
+"""Multi-streamed execution model (paper §5.2, §7.2).
+
+Builds the stream-task dependency graph for a compiled model over a tile
+set: one **dStream** processes partitions sequentially; within the current
+partition, up to ``n_sstreams`` sStreams and ``n_estreams`` eStreams process
+tiles concurrently.  Dependencies reproduce the SIGNAL/WAIT protocol:
+
+    dStream(p).pre  --SIGNAL-->  sStream(tile)  --SIGNAL.E-->  eStream(tile)
+    all eStream(tiles of p)  --(gather barrier)-->  dStream(p).post
+
+The event-driven engine that executes this graph against hardware resources
+lives in :mod:`repro.core.simulator`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .isa import Instr, SDEFunctions, DISPATCH_CYCLES
+from .tiling import TileSet
+
+
+@dataclasses.dataclass
+class HWConfig:
+    """ZIPPER hardware configuration (paper Table 4 defaults)."""
+
+    freq_ghz: float = 1.0
+    n_mu: int = 1
+    n_vu: int = 2
+    n_sstreams: int = 4
+    n_estreams: int = 4
+    # MU: one 32x128 output-stationary systolic array per instance
+    mu_rows: int = 32
+    mu_cols: int = 128
+    # VU: eight 32-wide SIMD cores per instance
+    vu_lanes: int = 8 * 32
+    # memory
+    hbm_gbps: float = 256.0     # HBM-1.0 (paper); TPUv5e profile uses 819
+    uem_mbytes: float = 21.0    # unified embedding memory (eDRAM)
+    th_kbytes: float = 256.0    # tile hub SRAM
+    dtype_bytes: int = 4
+
+    @property
+    def hbm_bytes_per_cycle(self) -> float:
+        return self.hbm_gbps / self.freq_ghz  # GB/s / GHz = bytes/ns = bytes/cycle
+
+    def scaled(self, **kw) -> "HWConfig":
+        return dataclasses.replace(self, **kw)
+
+
+#: TPU-v5e-like configuration for the hardware-adaptation experiments
+TPU_V5E_LIKE = HWConfig(freq_ghz=0.94, n_mu=4, n_vu=4, hbm_gbps=819.0,
+                        uem_mbytes=128.0, mu_rows=128, mu_cols=128)
+
+
+@dataclasses.dataclass
+class Task:
+    """A stream task: a straight-line instruction burst bound to a tile or
+    partition.  ``deps`` are task ids that must complete first."""
+
+    tid: int
+    kind: str                      # 's' | 'e' | 'd'
+    instrs: List[Tuple[Instr, int, int, int]]  # (template, m, k, n) bound dims
+    deps: List[int]
+    bytes_in: int = 0              # off-chip loads this task issues
+    bytes_out: int = 0
+    label: str = ""
+
+
+def instr_cycles(ins: Instr, m: int, hw: HWConfig) -> int:
+    """Latency model per instruction class (paper §7.1 units)."""
+    if m == 0:
+        return 0
+    if ins.unit == "MU":
+        # output-stationary systolic: each (mu_rows x mu_cols) output block
+        # streams K inputs plus fill/drain
+        import math
+        blocks = math.ceil(m / hw.mu_rows) * math.ceil(ins.n / hw.mu_cols)
+        fill = hw.mu_rows + hw.mu_cols
+        cyc = blocks * (ins.k + fill)
+        if ins.opcode == "BMM":
+            # per-row weight selection defeats weight-stationary reuse:
+            # weight stream refetched per block group (paper §8.3 observes
+            # BMM dilutes tiling benefit via on-chip access latency)
+            cyc = int(cyc * 2.0)
+        return cyc + DISPATCH_CYCLES
+    if ins.unit == "VU":
+        import math
+        lanework = m * max(ins.n, 1)
+        cyc = math.ceil(lanework / hw.vu_lanes)
+        if ins.opcode.startswith(("SCTR", "GTHR")):
+            cyc += m  # edge-list indirection: one TH lookup per item
+        if ins.opcode == "GEMV":
+            cyc = math.ceil(m * ins.k / hw.vu_lanes)
+        # one dispatch per *instruction*: a fused ELW chain pays it once
+        return cyc + DISPATCH_CYCLES
+    return DISPATCH_CYCLES
+
+
+def build_task_graph(sde: SDEFunctions, tiles: TileSet,
+                     hw: HWConfig) -> Tuple[List[Task], Dict[str, int]]:
+    """Lower (SDE functions × tile set) into the stream task DAG."""
+    tasks: List[Task] = []
+    stats = {"offchip_read": 0, "offchip_write": 0, "macs": 0, "elw_ops": 0}
+    by = hw.dtype_bytes
+
+    def _bind(instrs: List[Instr], n_src: int, n_edge: int, n_dst: int):
+        out = []
+        for ins in instrs:
+            m, k, n = ins.bound(n_src, n_edge, n_dst)
+            out.append((ins, m, k, n))
+            if ins.unit == "MU":
+                stats["macs"] += m * k * n
+            elif ins.unit == "VU":
+                stats["elw_ops"] += m * max(n, 1)
+        return out
+
+    tid = 0
+    prev_d: Optional[int] = None
+    for lvl in sde.all_levels():
+        s_t, e_t, d_t = sde.s.get(lvl, []), sde.e.get(lvl, []), sde.d.get(lvl, [])
+        has_tile_work = bool(s_t or e_t)
+        for p in range(tiles.n_dst_parts):
+            n_dst = int(tiles.part_size[p])
+            # dStream "pre" part for this (level, partition)
+            d_pre = Task(tid, "d", _bind(d_t, 0, 0, n_dst),
+                         deps=[prev_d] if prev_d is not None else [],
+                         bytes_in=n_dst * sde.dst_load_dim * by,
+                         label=f"d[{lvl}].{p}")
+            tasks.append(d_pre); tid += 1
+            prev_d = d_pre.tid
+            if not has_tile_work:
+                continue
+            tile_ids = tiles.tiles_of_partition(p)
+            e_tasks: List[int] = []
+            for t in tile_ids:
+                ns, ne = int(tiles.n_src[t]), int(tiles.n_edge[t])
+                if ne == 0 and tiles.sparse:
+                    continue
+                st = Task(tid, "s", _bind(s_t, ns, ne, n_dst), deps=[d_pre.tid],
+                          bytes_in=ns * sde.src_load_dim * by,
+                          label=f"s[{lvl}].{p}.{t}")
+                tasks.append(st); tid += 1
+                et = Task(tid, "e", _bind(e_t, ns, ne, n_dst), deps=[st.tid],
+                          bytes_in=ne * (8 + sde.edge_feat_dim * by),  # COO pair + edge feats
+                          label=f"e[{lvl}].{p}.{t}")
+                tasks.append(et); tid += 1
+                e_tasks.append(et.tid)
+            # gather barrier: next dStream step waits for all tiles of p
+            barrier = Task(tid, "d", [], deps=e_tasks or [d_pre.tid],
+                           bytes_out=(n_dst * sde.out_dim * by
+                                      if lvl == sde.max_level - 1 or lvl == sde.max_level else 0),
+                           label=f"dbar[{lvl}].{p}")
+            tasks.append(barrier); tid += 1
+            prev_d = barrier.tid
+
+    for t in tasks:
+        stats["offchip_read"] += t.bytes_in
+        stats["offchip_write"] += t.bytes_out
+    return tasks, stats

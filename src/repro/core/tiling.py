@@ -1,0 +1,171 @@
+"""Grid-based graph tiling (paper §5.1, §5.3).
+
+The adjacency matrix is split into a P (destination partitions) × S (source
+partitions) grid of *tiles*.  Each tile uniquely owns the edges whose dst is
+in its destination partition and src in its source partition.
+
+* **regular tiling** — a tile's source-vertex set is the *whole* source
+  partition (vertices loaded whether or not they have edges in the tile).
+* **sparse tiling** — only source vertices with ≥1 edge in the tile are kept
+  (compaction); empty tiles are dropped entirely.
+
+JAX needs static shapes, so tiles are padded to (S_max, E_max) with explicit
+``n_src`` / ``n_edge`` counts; masked tails contribute nothing (sum) / -inf
+(max).  The padded batch is what the pipelined executor ``lax.scan``s over
+and what the Pallas tile kernel consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..gnn.graphs import Graph
+
+
+@dataclasses.dataclass
+class TileSet:
+    """Padded, partition-ordered tile batch."""
+
+    # per-tile payload (T = number of tiles kept)
+    src_ids: np.ndarray     # (T, S_max) int32 — global source-vertex ids
+    edge_src: np.ndarray    # (T, E_max) int32 — local index into src_ids row
+    edge_dst: np.ndarray    # (T, E_max) int32 — dst offset within the tile's partition
+    edge_gid: np.ndarray    # (T, E_max) int32 — global edge index (for edge feats)
+    n_src: np.ndarray       # (T,) int32
+    n_edge: np.ndarray      # (T,) int32
+    part_id: np.ndarray     # (T,) int32 — destination partition of each tile
+    # per-partition metadata (P,)
+    part_start: np.ndarray  # (P,) int32 — first dst vertex id of the partition
+    part_size: np.ndarray   # (P,) int32
+    # config
+    n_dst_parts: int
+    n_src_parts: int
+    sparse: bool
+    n_vertices: int
+    n_edges: int
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.src_ids.shape[0])
+
+    @property
+    def s_max(self) -> int:
+        return int(self.src_ids.shape[1])
+
+    @property
+    def e_max(self) -> int:
+        return int(self.edge_src.shape[1])
+
+    # ---- cost accounting (paper Fig 11: off-chip access model) -------------
+    def src_vertex_loads(self) -> int:
+        """Total source-vertex embedding rows loaded from off-chip."""
+        return int(self.n_src.sum())
+
+    def dst_vertex_loads(self) -> int:
+        """Destination rows are loaded once per partition per phase."""
+        return int(self.part_size.sum())
+
+    def offchip_read_bytes(self, dim: int, dtype_bytes: int = 4,
+                           dst_streams: int = 1) -> int:
+        vert = (self.src_vertex_loads() + dst_streams * self.dst_vertex_loads()) * dim * dtype_bytes
+        edge_list = int(self.n_edge.sum()) * 2 * 4  # (src,dst) int32 pairs
+        return vert + edge_list
+
+    def tiles_of_partition(self, p: int) -> np.ndarray:
+        return np.nonzero(self.part_id == p)[0]
+
+
+def _even_bounds(n: int, parts: int) -> np.ndarray:
+    """parts+1 boundaries of an even split of range(n)."""
+    return np.linspace(0, n, parts + 1).round().astype(np.int64)
+
+
+def grid_tile(graph: Graph, n_dst_parts: int, n_src_parts: int,
+              sparse: bool = True, pad_multiple: int = 8) -> TileSet:
+    """Grid-based tiling; ``sparse=False`` reproduces regular tiling."""
+    V, E = graph.n_vertices, graph.n_edges
+    db = _even_bounds(V, n_dst_parts)
+    sb = _even_bounds(V, n_src_parts)
+    dpart = np.searchsorted(db, graph.dst, side="right") - 1
+    spart = np.searchsorted(sb, graph.src, side="right") - 1
+
+    # bucket edges by (dst_part, src_part), partition-major order
+    key = dpart.astype(np.int64) * n_src_parts + spart
+    order = np.argsort(key, kind="stable")
+    key_sorted = key[order]
+    uniq, starts = np.unique(key_sorted, return_index=True)
+    ends = np.append(starts[1:], E)
+
+    tiles = []  # (part, src_part, edge_idx_sorted_slice)
+    for k, s, e in zip(uniq, starts, ends):
+        tiles.append((int(k // n_src_parts), int(k % n_src_parts), order[s:e]))
+    if not sparse:
+        # regular tiling keeps every (p, s) cell, even empty ones
+        present = {(p, s) for p, s, _ in tiles}
+        for p in range(n_dst_parts):
+            for s in range(n_src_parts):
+                if (p, s) not in present:
+                    tiles.append((p, s, np.empty(0, dtype=np.int64)))
+        tiles.sort(key=lambda t: (t[0], t[1]))
+
+    rows = []
+    for p, s, eidx in tiles:
+        esrc_g = graph.src[eidx]
+        edst_g = graph.dst[eidx]
+        if sparse:
+            srcs, esrc_local = np.unique(esrc_g, return_inverse=True)
+        else:
+            srcs = np.arange(sb[s], sb[s + 1], dtype=np.int64)
+            esrc_local = esrc_g - sb[s]
+        rows.append({
+            "p": p,
+            "srcs": srcs.astype(np.int32),
+            "esrc": esrc_local.astype(np.int32),
+            "edst": (edst_g - db[p]).astype(np.int32),
+            "egid": eidx.astype(np.int32),
+        })
+
+    def _pad_to(x: int) -> int:
+        return max(pad_multiple, int(math.ceil(max(x, 1) / pad_multiple)) * pad_multiple)
+
+    s_max = _pad_to(max((len(r["srcs"]) for r in rows), default=1))
+    e_max = _pad_to(max((len(r["esrc"]) for r in rows), default=1))
+    T = len(rows)
+
+    src_ids = np.zeros((T, s_max), np.int32)
+    edge_src = np.zeros((T, e_max), np.int32)
+    edge_dst = np.zeros((T, e_max), np.int32)
+    edge_gid = np.zeros((T, e_max), np.int32)
+    n_src = np.zeros((T,), np.int32)
+    n_edge = np.zeros((T,), np.int32)
+    part_id = np.zeros((T,), np.int32)
+    for i, r in enumerate(rows):
+        k, m = len(r["srcs"]), len(r["esrc"])
+        src_ids[i, :k] = r["srcs"]
+        edge_src[i, :m] = r["esrc"]
+        edge_dst[i, :m] = r["edst"]
+        edge_gid[i, :m] = r["egid"]
+        n_src[i], n_edge[i], part_id[i] = k, m, r["p"]
+
+    return TileSet(
+        src_ids=src_ids, edge_src=edge_src, edge_dst=edge_dst, edge_gid=edge_gid,
+        n_src=n_src, n_edge=n_edge, part_id=part_id,
+        part_start=db[:-1].astype(np.int32),
+        part_size=np.diff(db).astype(np.int32),
+        n_dst_parts=n_dst_parts, n_src_parts=n_src_parts, sparse=sparse,
+        n_vertices=V, n_edges=E)
+
+
+def choose_grid(n_vertices: int, dim: int, vmem_budget_bytes: int = 8 << 20,
+                dtype_bytes: int = 4) -> Tuple[int, int]:
+    """Pick (n_dst_parts, n_src_parts) so a tile's working set — one source
+    block + one destination block of embeddings — fits the on-chip budget
+    (paper §5.1; adapted from the 21 MB eDRAM UEM to a VMEM budget)."""
+    row_bytes = dim * dtype_bytes
+    # budget split: half for sources, half for destination accumulators
+    rows_per_block = max(64, vmem_budget_bytes // (2 * row_bytes))
+    parts = max(1, int(math.ceil(n_vertices / rows_per_block)))
+    return parts, parts

@@ -1,0 +1,83 @@
+"""Deterministic sharded token pipeline.
+
+No external datasets ship with this container, so the pipeline synthesizes a
+reproducible token stream (hash-mixed counter — NOT jax PRNG, so batches are
+computable on any host without device state).  What matters for the
+framework is the *contract*:
+
+* the global batch for step ``s`` is a pure function of ``(seed, s)`` — any
+  host can regenerate any shard, which is what makes restart/elastic
+  reshard and straggler re-assignment trivial (DESIGN.md §6);
+* ``shard_for(step, host, n_hosts)`` returns the host's slice;
+* ``make_batch_specs`` produces the ShapeDtypeStructs the dry-run lowers
+  against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, SHAPES
+from ..models.common import DP, resolve_spec, sanitize_spec
+from ..models.lm import VLM_PATCHES
+
+
+def _mix(x: np.ndarray) -> np.ndarray:
+    """splitmix64 — stateless hash of a counter array."""
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    cfg: ArchConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def global_batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        B, S = self.global_batch, self.seq_len
+        base = np.uint64(self.seed) * np.uint64(1 << 40) + np.uint64(step) * np.uint64(B * S)
+        ctr = base + np.arange(B * S, dtype=np.uint64)
+        toks = (_mix(ctr) % np.uint64(self.cfg.vocab)).astype(np.int32).reshape(B, S)
+        out = {"tokens": toks}
+        if self.cfg.family == "vlm":
+            emb = (_mix(ctr[: B * VLM_PATCHES * 4]).astype(np.float32) / 2**64 - 0.5)
+            out["tokens"] = toks[:, : S - VLM_PATCHES]
+            out["patch_embeds"] = np.resize(emb, (B, VLM_PATCHES, self.cfg.d_model)).astype(np.float32)
+        if self.cfg.family == "audio":
+            fr = (_mix(ctr[: B * 16]).astype(np.float32) / 2**64 - 0.5)
+            out["frames"] = np.resize(fr, (B, self.cfg.enc_len, self.cfg.d_model)).astype(np.float32)
+        return out
+
+    def shard_for(self, step: int, host: int, n_hosts: int) -> Dict[str, np.ndarray]:
+        gb = self.global_batch_at(step)
+        per = self.global_batch // n_hosts
+        return {k: v[host * per:(host + 1) * per] for k, v in gb.items()}
+
+
+def make_batch_specs(cfg: ArchConfig, shape_name: str, mesh,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs (with shardings) for one (arch × shape) cell."""
+    S, B, kind = SHAPES[shape_name]
+
+    def sds(shape, dt, spec):
+        s = sanitize_spec(resolve_spec(spec, mesh), shape, mesh)
+        return jax.ShapeDtypeStruct(shape, dt, sharding=NamedSharding(mesh, s))
+
+    if kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32, (DP, None))}
+    S_tok = S - VLM_PATCHES if cfg.family == "vlm" else S
+    specs = {"tokens": sds((B, S_tok), jnp.int32, (DP, None))}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = sds((B, VLM_PATCHES, cfg.d_model), dtype, (DP, None, None))
+    if cfg.family == "audio":
+        specs["frames"] = sds((B, cfg.enc_len, cfg.d_model), dtype, (DP, None, None))
+    return specs

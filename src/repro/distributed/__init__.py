@@ -1,0 +1,2 @@
+from .fault import FailureDetector, ElasticPlan, plan_remesh  # noqa: F401
+from .compression import quantize_grads, dequantize_grads, compressed_psum  # noqa: F401

@@ -1,0 +1,1 @@
+from . import graphs, models, frontend  # noqa: F401

@@ -1,0 +1,190 @@
+"""The paper's five benchmark GNN models (§8.1), written against the classic
+whole-graph programming model.
+
+GCN, GAT (1 head, as in the paper), GraphSAGE (maxpool aggregator), GGNN
+(GRU update), R-GCN (3 edge types, as in the paper).  For GAT and SAGE we
+also provide the *naive* variants the paper uses to evaluate the compiler's
+E2V optimization (Fig 12): per-edge ops that a library author would normally
+hand-hoist are left on the edges, and the compiler must hoist them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.trace import GnnTrace, GraphRef, trace_model
+from .graphs import Graph
+
+EMBED = 128  # the paper's input/output embedding size for all experiments
+
+
+# ---------------------------------------------------------------------------
+# model builders (trace-time)
+# ---------------------------------------------------------------------------
+
+def build_gcn(tr: GnnTrace, g: GraphRef, in_dim: int = EMBED, out_dim: int = EMBED):
+    """GCN layer: relu(D^-1/2 A D^-1/2 X W)  — norm via precomputed dnorm."""
+    x = tr.input_vertex(in_dim, "x")
+    dn = tr.input_vertex(1, "dnorm")  # (V,1): 1/sqrt(max(deg,1))
+    w = tr.param("W", (in_dim, out_dim))
+    h = (x * dn).matmul(w)
+    m = g.scatter_src(h)
+    agg = g.gather_sum(m)
+    tr.mark_output((agg * dn).relu())
+
+
+def build_gat(tr: GnnTrace, g: GraphRef, in_dim: int = EMBED, out_dim: int = EMBED,
+              naive: bool = False):
+    """GAT layer, single head (paper §8.1). ``naive=True`` leaves the two
+    attention mat-vecs on the edges — the compiler's E2V pass must hoist them
+    (paper Fig 8b / Fig 12)."""
+    x = tr.input_vertex(in_dim, "x")
+    w = tr.param("W", (in_dim, out_dim))
+    a1 = tr.param("a_src", (out_dim, 1))
+    a2 = tr.param("a_dst", (out_dim, 1))
+    h = x.matmul(w)
+    if naive:
+        hs = g.scatter_src(h)
+        hd = g.scatter_dst(h)
+        e = (hs.gemv(a1) + hd.gemv(a2)).leaky_relu()
+    else:
+        es = g.scatter_src(h.gemv(a1))
+        ed = g.scatter_dst(h.gemv(a2))
+        e = (es + ed).leaky_relu()
+    alpha = g.edge_softmax(e)
+    m = g.scatter_src(h) * alpha
+    tr.mark_output(g.gather_sum(m))
+
+
+def build_gat_naive(tr, g, in_dim: int = EMBED, out_dim: int = EMBED):
+    return build_gat(tr, g, in_dim, out_dim, naive=True)
+
+
+def build_sage(tr: GnnTrace, g: GraphRef, in_dim: int = EMBED, out_dim: int = EMBED,
+               naive: bool = False):
+    """GraphSAGE-maxpool: h_N = max_j relu(W_p x_j + b); out = relu(W1 x + W2 h_N)."""
+    x = tr.input_vertex(in_dim, "x")
+    wp = tr.param("W_pool", (in_dim, out_dim))
+    bp = tr.param("b_pool", (out_dim,))
+    w1 = tr.param("W_self", (in_dim, out_dim))
+    w2 = tr.param("W_neigh", (out_dim, out_dim))
+    if naive:
+        # pooling MLP applied per edge (redundant): E2V must hoist it
+        xs = g.scatter_src(x)
+        pe = xs.matmul(wp).bias_add(bp).relu()
+    else:
+        pv = x.matmul(wp).bias_add(bp).relu()
+        pe = g.scatter_src(pv)
+    hn = g.gather_max(pe)
+    tr.mark_output((x.matmul(w1) + hn.matmul(w2)).relu())
+
+
+def build_sage_naive(tr, g, in_dim: int = EMBED, out_dim: int = EMBED):
+    return build_sage(tr, g, in_dim, out_dim, naive=True)
+
+
+def build_ggnn(tr: GnnTrace, g: GraphRef, in_dim: int = EMBED, out_dim: Optional[int] = None):
+    """GGNN: a = A(X W_msg); h' = GRU(a, x) — GRU from separate ELW+GEMM ops
+    (the paper implements the GRU with separate instructions on ZIPPER)."""
+    d = in_dim
+    x = tr.input_vertex(d, "x")
+    wm = tr.param("W_msg", (d, d))
+    wz, uz = tr.param("W_z", (d, d)), tr.param("U_z", (d, d))
+    wr, ur = tr.param("W_r", (d, d)), tr.param("U_r", (d, d))
+    wh, uh = tr.param("W_h", (d, d)), tr.param("U_h", (d, d))
+    a = g.gather_sum(g.scatter_src(x.matmul(wm)))
+    z = (a.matmul(wz) + x.matmul(uz)).sigmoid()
+    r = (a.matmul(wr) + x.matmul(ur)).sigmoid()
+    hh = (a.matmul(wh) + (r * x).matmul(uh)).tanh()
+    # h' = (1-z)*x + z*hh  ==  x + z*(hh - x)
+    tr.mark_output(x + z * (hh - x))
+
+
+def build_rgcn(tr: GnnTrace, g: GraphRef, in_dim: int = EMBED, out_dim: int = EMBED,
+               n_types: int = 3):
+    """R-GCN with 3 randomly-assigned edge types (paper §8.1): per-edge
+    type-selected weights — an index-guided BMM that canNOT be hoisted."""
+    x = tr.input_vertex(in_dim, "x")
+    et = tr.input_edge(1, "etype")
+    wr = tr.param("W_rel", (n_types, in_dim, out_dim))
+    w0 = tr.param("W_self", (in_dim, out_dim))
+    xs = g.scatter_src(x)
+    m = xs.bmm_edge(wr, et)
+    h = g.gather_sum(m)
+    tr.mark_output((h + x.matmul(w0)).relu())
+
+
+def build_gin(tr: GnnTrace, g: GraphRef, in_dim: int = EMBED, out_dim: int = EMBED):
+    """GIN (Xu et al.): h' = MLP((1+eps)·x + sum_j x_j) — beyond the paper's
+    five models, exercising the generality claim (sum-agg + vertex MLP)."""
+    x = tr.input_vertex(in_dim, "x")
+    w1 = tr.param("W1", (in_dim, out_dim))
+    b1 = tr.param("b1", (out_dim,))
+    w2 = tr.param("W2", (out_dim, out_dim))
+    eps = tr.param("eps_gain", (in_dim, in_dim))  # (1+eps)·x as a learned diag-ish map
+    agg = g.gather_sum(g.scatter_src(x))
+    h = agg + x.matmul(eps)
+    tr.mark_output(h.matmul(w1).bias_add(b1).relu().matmul(w2))
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    name: str
+    build: Callable
+    needs_etype: bool = False
+    needs_dnorm: bool = False
+    n_edge_types: int = 3
+
+
+MODELS: Dict[str, ModelSpec] = {
+    "gcn": ModelSpec("gcn", build_gcn, needs_dnorm=True),
+    "gat": ModelSpec("gat", build_gat),
+    "gat_naive": ModelSpec("gat_naive", build_gat_naive),
+    "sage": ModelSpec("sage", build_sage),
+    "sage_naive": ModelSpec("sage_naive", build_sage_naive),
+    "ggnn": ModelSpec("ggnn", build_ggnn),
+    "rgcn": ModelSpec("rgcn", build_rgcn, needs_etype=True),
+    "gin": ModelSpec("gin", build_gin),
+}
+
+PAPER_MODELS = ("gcn", "gat", "sage", "ggnn", "rgcn")
+
+
+def trace_named(name: str, in_dim: int = EMBED, out_dim: int = EMBED) -> GnnTrace:
+    spec = MODELS[name]
+    return trace_model(lambda tr, g: spec.build(tr, g, in_dim, out_dim), name=name)
+
+
+# ---------------------------------------------------------------------------
+# parameter / input initialization
+# ---------------------------------------------------------------------------
+
+def init_params(tr: GnnTrace, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in tr.params.items():
+        fan_in = shape[0] if len(shape) > 1 else 1
+        params[name] = (rng.standard_normal(shape) / np.sqrt(max(fan_in, 1))).astype(np.float32)
+    return params
+
+
+def init_inputs(tr: GnnTrace, graph: Graph, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed + 1)
+    inputs: Dict[str, np.ndarray] = {}
+    for n in tr.nodes:
+        if n.op != "input":
+            continue
+        name = n.attrs["name"]
+        if name == "dnorm":
+            deg = graph.in_degrees().astype(np.float32)
+            inputs[name] = (1.0 / np.sqrt(np.maximum(deg, 1.0)))[:, None]
+        elif name == "etype":
+            assert graph.edge_type is not None, "graph has no edge types"
+            inputs[name] = graph.edge_type[:, None].astype(np.float32)
+        elif n.space == "V":
+            inputs[name] = rng.standard_normal((graph.n_vertices, n.dim)).astype(np.float32)
+        else:
+            inputs[name] = rng.standard_normal((graph.n_edges, n.dim)).astype(np.float32)
+    return inputs

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles.
+
+  flash_attention/  blocked online-softmax attention (train/prefill/decode)
+  moe_dispatch/     capacity-bucket grouped FFN (ZIPPER tiling over tokens)
+  tile_spmm/        block-dense SpMM over graph tiles (the paper's dataflow)
+  segment_softmax/  GAT edge softmax, single-pass online variant
+Each provides kernel.py (Pallas), ops.py (jit wrapper), ref.py (oracle).
+"""

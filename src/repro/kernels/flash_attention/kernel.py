@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention kernel (explicit VMEM tiling).
+
+Grid: (batch, q_head, q_block, kv_block) — the kv_block axis is the ZIPPER
+tile axis: Pallas grid pipelining double-buffers the HBM->VMEM DMA of block
+j+1 against the MXU matmul of block j (inter-tile pipelining, DESIGN.md §2).
+Online-softmax state (o, m, l) lives in VMEM scratch and persists across the
+sequential kv_block iterations; the output is finalized on the last block.
+
+GQA is handled in the index maps (kv head = q head // G) — no KV replication
+in HBM or VMEM.  Validated against ``ref.attention_ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, window: Optional[int], scale: float,
+            block_q: int, block_k: int, seq_q: int, seq_k: int, n_kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + (seq_k - seq_q)   # right-aligned query positions
+    k_start = kj * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_k
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_prev * alpha + p.sum(-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip fully-masked blocks (strictly above the diagonal)
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 512,
+                           kv_len: Optional[jnp.ndarray] = None,
+                           interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) -> (B, Sq, H, D).
+
+    ``interpret=True`` (default here) runs the kernel body in Python — this
+    container is CPU-only; on a real TPU pass ``interpret=False``.
+    ``kv_len`` is not supported by the kernel path (used only for ragged
+    decode); callers fall back to the scan path for that case.
+    """
+    assert kv_len is None, "ragged kv_len: use the scan path"
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    block_q = max(8, min(block_q, Sq))
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, scale=D ** -0.5,
+        block_q=block_q, block_k=block_k, seq_q=Sq, seq_k=Sk,
+        n_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)  # (B, Sq, H, D)

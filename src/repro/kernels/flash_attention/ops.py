@@ -1,0 +1,89 @@
+"""Blocked (flash) attention — production entry point.
+
+Two interchangeable implementations of the same online-softmax tiling:
+
+* ``flash_attention(..., use_pallas=False)`` — ``lax.scan`` over KV blocks.
+  Pure jnp: compiles on every backend, is GSPMD-shardable, and never
+  materializes the (Sq, Sk) score matrix.  This is what the LM stack uses
+  for training / prefill / decode on arbitrary meshes.
+* ``use_pallas=True`` — the TPU Pallas kernel in ``kernel.py`` (explicit
+  VMEM BlockSpecs, MXU-aligned tiles); validated in interpret mode on CPU.
+
+ZIPPER mapping (DESIGN.md §4): KV blocks are the tiles; the scan/grid is the
+inter-tile pipeline that overlaps the memory-bound KV loads ("GOP") of block
+t+1 with the MXU matmuls ("GEMM") of block t.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    block_k: int = 512, kv_len: Optional[jnp.ndarray] = None,
+                    use_pallas: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D). Returns (B, Sq, H, D).
+
+    Queries are right-aligned against keys (decode: Sq=1 attends the whole
+    cache).  ``kv_len`` masks a partially-filled cache.
+    """
+    if use_pallas:
+        from .kernel import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_k=block_k, kv_len=kv_len)
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    Dv = v.shape[-1]  # v head dim may differ (MLA: qk=192, v=128)
+    G = H // K
+    scale = D ** -0.5
+    orig_dtype = q.dtype
+    qg = (q * scale).reshape(B, Sq, K, G, D).astype(jnp.float32)
+
+    block_k = min(block_k, Sk)
+    nblk = -(-Sk // block_k)
+    pad = nblk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_k, K, D).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vb = v.reshape(B, nblk, block_k, K, Dv).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    base_len = jnp.full((B,), Sk, jnp.int32) if kv_len is None else kv_len
+
+    def body(carry, xs):
+        o, m, l = carry
+        kblk, vblk, blk_i = xs
+        k_pos = blk_i * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk)          # (B,K,G,Sq,bk)
+        msk = jnp.ones((Sq, block_k), bool)
+        if causal:
+            msk &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            msk &= k_pos[None, :] > q_pos[:, None] - window
+        msk = msk[None] & (k_pos[None, None, :] < base_len[:, None, None])
+        s = jnp.where(msk[:, None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        o = o * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vblk)
+        return (o, m_new, l), 0
+
+    o0 = jnp.zeros((B, K, G, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, K, G, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    from ... import runtime_flags
+    # checkpoint the block body: backward recomputes each block's scores
+    # instead of saving the (Sq, block_k) residuals — the flash-attention
+    # backward memory profile (carries between blocks are O(Sq·D))
+    (o, m, l), _ = jax.lax.scan(jax.checkpoint(body), (o0, m0, l0),
+                                (kb, vb, jnp.arange(nblk, dtype=jnp.int32)),
+                                unroll=runtime_flags.probe_unroll())
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv).astype(orig_dtype)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for blocked (flash) attention.
+
+Naive materialized softmax attention with GQA, causal and sliding-window
+masking.  Small shapes only — this is the correctness reference the Pallas
+kernel and the scan-based production path are checked against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None, kv_len: Optional[jnp.ndarray] = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) with H % K == 0 (GQA).
+
+    ``window``: sliding-window size (a query attends to keys in
+    [pos - window + 1, pos]).  ``kv_len``: optional (B,) valid kv length
+    (decode with a partially-filled cache).  Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    assert H % K == 0
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned queries
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask = mask[None] & (k_pos[None] < kv_len[:, None, None])  # (B, Sq, Sk)
+        s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    else:
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p / denom, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

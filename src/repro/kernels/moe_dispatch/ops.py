@@ -1,0 +1,111 @@
+"""Capacity-bucketed MoE dispatch/combine — ZIPPER tiling over the
+token→expert bipartite graph (DESIGN.md §4).
+
+The token→expert assignment is a sparse graph: tokens are source vertices,
+experts are destination partitions.  We reproduce the paper's machinery:
+
+* **degree-sort reorder** — tokens are sorted by assigned expert, so each
+  expert's tokens are contiguous;
+* **sparse tiling**       — tokens land in per-expert *capacity buckets*
+  (static-shape tiles); row-blocks beyond an expert's live count are dead
+  tiles the Pallas kernel skips structurally;
+* **inter-tile pipelining** — the Pallas grid double-buffers the gather of
+  bucket t+1 against the expert GEMM of bucket t.
+
+All functions here are device-local (no collectives): the shard_map wrapper
+that adds expert/tensor parallelism lives in ``repro.models.moe``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Routing:
+    """Static-shape routing plan for one device's tokens."""
+
+    bucket_idx: jnp.ndarray   # (T*k,) position in the flattened (E*C) buckets
+    token_idx: jnp.ndarray    # (T*k,) source token of each assignment (sorted order)
+    keep: jnp.ndarray         # (T*k,) bool — False = dropped by capacity
+    weight: jnp.ndarray       # (T*k,) routing weight of each assignment
+    counts: jnp.ndarray       # (E,) live tokens per expert (pre-capacity-clip)
+    aux_loss: jnp.ndarray     # load-balance auxiliary loss (scalar)
+
+
+def route(x, router_w, top_k: int, capacity: int, *, norm_topk: bool = True,
+          router_bias: Optional[jnp.ndarray] = None) -> Routing:
+    """Top-k routing + capacity-bucket assignment. x: (T, d)."""
+    T = x.shape[0]
+    logits = (x @ router_w).astype(jnp.float32)
+    if router_bias is not None:  # aux-loss-free balancing bias (DeepSeek-V3)
+        logits = logits + router_bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = probs.shape[-1]
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    if norm_topk:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-20)
+
+    flat_e = top_i.reshape(-1)                        # (T*k,)
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    order = jnp.argsort(flat_e, stable=True)          # degree-sort reorder
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(T * top_k) - first               # rank within expert
+    keep = pos < capacity
+    bucket_idx = jnp.where(keep, se * capacity + pos, E * capacity)  # sentinel slot
+
+    counts = jnp.bincount(flat_e, length=E)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    f = counts.astype(jnp.float32) / jnp.maximum(T * top_k, 1)
+    p_mean = probs.mean(0)
+    aux = E * jnp.sum(f * p_mean)
+    return Routing(bucket_idx=bucket_idx, token_idx=st, keep=keep,
+                   weight=sw.astype(x.dtype), counts=counts, aux_loss=aux)
+
+
+def dispatch(x, r: Routing, n_experts: int, capacity: int) -> jnp.ndarray:
+    """Gather tokens into (E, C, d) buckets (dead slots are zero)."""
+    d = x.shape[-1]
+    buckets = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    buckets = buckets.at[r.bucket_idx].set(x[r.token_idx])
+    return buckets[:-1].reshape(n_experts, capacity, d)
+
+
+def combine(y_buckets, r: Routing, n_tokens: int) -> jnp.ndarray:
+    """Scatter expert outputs back to tokens, applying routing weights."""
+    E, C, d = y_buckets.shape
+    flat = jnp.concatenate([y_buckets.reshape(E * C, d),
+                            jnp.zeros((1, d), y_buckets.dtype)])
+    vals = flat[r.bucket_idx] * (r.weight * r.keep)[:, None]
+    return jax.ops.segment_sum(vals, r.token_idx, num_segments=n_tokens)
+
+
+def expert_ffn_einsum(buckets, w_gate, w_up, w_down):
+    """Reference per-expert SwiGLU over buckets: (E, C, d) -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", buckets, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buckets, w_up)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w_down)
+
+
+def moe_block(x, router_w, w_gate, w_up, w_down, *, top_k: int, capacity: int,
+              norm_topk: bool = True, router_bias=None, use_pallas: bool = False):
+    """Device-local routed MoE: route -> dispatch -> grouped FFN -> combine.
+
+    Returns (y, aux_loss)."""
+    E = w_gate.shape[0]
+    r = route(x, router_w, top_k, capacity, norm_topk=norm_topk,
+              router_bias=router_bias)
+    buckets = dispatch(x, r, E, capacity)
+    if use_pallas:
+        from .kernel import grouped_ffn_pallas
+        y_buckets = grouped_ffn_pallas(buckets, w_gate, w_up, w_down,
+                                       jnp.minimum(r.counts, capacity))
+    else:
+        y_buckets = expert_ffn_einsum(buckets, w_gate, w_up, w_down)
+    return combine(y_buckets, r, x.shape[0]), r.aux_loss

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for routed MoE (dense evaluation).
+
+Computes every expert's FFN for every token and combines with the routing
+weights — O(T·E·ff), tiny shapes only.  The production capacity-bucketed
+path (ops.py) and the Pallas grouped-FFN kernel are checked against this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def moe_ref(x, router_w, w_gate, w_up, w_down, top_k: int,
+            *, norm_topk: bool = True):
+    """x: (T, d); router_w: (d, E); w_*: (E, d, f)/(E, f, d). Returns (T, d).
+
+    Top-k softmax routing (softmax over all experts, then renormalized over
+    the selected k when ``norm_topk``), no capacity limit (the oracle never
+    drops tokens).
+    """
+    probs = jax.nn.softmax((x @ router_w).astype(jnp.float32), axis=-1)  # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    if norm_topk:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-20)
+    T, E = probs.shape
+    # dense: every expert over every token
+    h = jnp.einsum("td,edf->tef", x, w_gate)
+    u = jnp.einsum("td,edf->tef", x, w_up)
+    y_all = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u, w_down)  # (T, E, d)
+    sel = jnp.zeros((T, E), x.dtype)
+    sel = sel.at[jnp.arange(T)[:, None], top_i].add(top_p.astype(x.dtype))
+    return jnp.einsum("ted,te->td", y_all, sel)

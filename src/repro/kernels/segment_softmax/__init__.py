@@ -1,0 +1,9 @@
+"""Segment softmax over ZIPPER partition tiles (GAT edge softmax).
+
+Implementation lives beside the tile-SpMM kernel (same block-dense tile
+layout, shared scalar-prefetch metadata); this package re-exports it under
+the kernel taxonomy's name.
+"""
+from ..tile_spmm.kernel import segment_softmax_pallas  # noqa: F401
+from ..tile_spmm.ref import segment_softmax_ref        # noqa: F401
+from ..tile_spmm.ops import gat_aggregate              # noqa: F401

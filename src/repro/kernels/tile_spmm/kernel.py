@@ -1,0 +1,141 @@
+"""Pallas TPU kernel for ZIPPER tiled SpMM (the paper's core dataflow).
+
+Hardware adaptation (DESIGN.md §2): the ASIC's per-edge gather/scatter units
+have no TPU analogue, so a tile's sparse structure is *densified* into an
+adjacency block A_t (Dmax × Smax) over the **compacted** sources — sparsity
+is exploited structurally (sparse tiling keeps Smax small and drops empty
+tiles) while the MXU gets dense work, and the VPU never chases pointers.
+
+Grid = tiles, partition-major.  Scalar-prefetched tile metadata (the "tile
+hub"): ``part_id`` drives the output BlockSpec index map (all tiles of one
+partition revisit the same output block), ``tile_flags`` marks first/last
+tile of each partition for accumulator init/flush.  The Pallas grid pipeline
+overlaps tile t+1's A/X DMA with tile t's MXU matmul — the paper's
+inter-tile pipelining, realized by the hardware DMA engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+FIRST, LAST = 1, 2
+
+
+def _kernel(flags_ref, part_ref, a_ref, x_ref, o_ref, acc_ref):
+    t = pl.program_id(0)
+    flags = flags_ref[t]
+
+    @pl.when(flags & FIRST != 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # (D, S)
+    x = x_ref[0].astype(jnp.float32)          # (S, F)
+    acc_ref[...] += jax.lax.dot(a, x, preferred_element_type=jnp.float32)
+
+    @pl.when(flags & LAST != 0)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tile_flags(part_id: np.ndarray) -> np.ndarray:
+    """FIRST/LAST markers per tile (partition-major tile order)."""
+    T = len(part_id)
+    f = np.zeros((T,), np.int32)
+    for i in range(T):
+        if i == 0 or part_id[i] != part_id[i - 1]:
+            f[i] |= FIRST
+        if i == T - 1 or part_id[i] != part_id[i + 1]:
+            f[i] |= LAST
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "interpret"))
+def tile_spmm_pallas(adj, xsrc, part_id, flags, *, n_parts: int,
+                     interpret: bool = True):
+    """adj: (T, D, S); xsrc: (T, S, F); part_id/flags: (T,) int32.
+
+    Returns (P, D, F).  Tiles must be partition-major (grid_tile order)."""
+    T, D, S = adj.shape
+    F = xsrc.shape[-1]
+    grid = (T,)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,   # flags, part_id -> SMEM (the tile hub)
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, D, S), lambda t, flags, part: (t, 0, 0)),
+                pl.BlockSpec((1, S, F), lambda t, flags, part: (t, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, D, F), lambda t, flags, part: (part[t], 0, 0)),
+            scratch_shapes=[pltpu.VMEM((D, F), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_parts, D, F), xsrc.dtype),
+        interpret=interpret,
+    )(flags.astype(jnp.int32), part_id.astype(jnp.int32), adj, xsrc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# online-softmax variant (GAT edge softmax in ONE pass over tiles —
+# the beyond-paper optimization replacing the 3-phase schedule, §Perf)
+# ---------------------------------------------------------------------------
+
+def _softmax_kernel(flags_ref, part_ref, s_ref, v_ref, o_ref,
+                    acc_ref, m_ref, l_ref):
+    t = pl.program_id(0)
+    flags = flags_ref[t]
+
+    @pl.when(flags & FIRST != 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = s_ref[0].astype(jnp.float32)              # (D, S) masked with <= -1e30
+    v = v_ref[0].astype(jnp.float32)              # (S, F)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s > -1e29, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(flags & LAST != 0)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "interpret"))
+def segment_softmax_pallas(scores, vals, part_id, flags, *, n_parts: int,
+                           interpret: bool = True):
+    """Single-pass segment softmax over partition tiles (flash-style)."""
+    T, D, S = scores.shape
+    F = vals.shape[-1]
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((1, D, S), lambda t, flags, part: (t, 0, 0)),
+                pl.BlockSpec((1, S, F), lambda t, flags, part: (t, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, D, F), lambda t, flags, part: (part[t], 0, 0)),
+            scratch_shapes=[pltpu.VMEM((D, F), jnp.float32),
+                            pltpu.VMEM((D, 1), jnp.float32),
+                            pltpu.VMEM((D, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_parts, D, F), vals.dtype),
+        interpret=interpret,
+    )(flags.astype(jnp.int32), part_id.astype(jnp.int32), scores, vals)
+    return out

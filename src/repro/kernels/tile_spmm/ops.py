@@ -1,0 +1,61 @@
+"""Jitted wrappers: TileSet -> block-dense tensors -> Pallas tile kernels.
+
+``densify_tiles`` turns a ZIPPER :class:`TileSet` plus source features into
+the (adj, xsrc) block-dense form the TPU kernels consume; ``spmm`` /
+``gat_aggregate`` are the public entry points (used by the GNN benchmarks
+and by ``core/pipeline.py`` as the accelerated inner body).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.tiling import TileSet
+from .kernel import segment_softmax_pallas, tile_flags, tile_spmm_pallas
+from .ref import segment_softmax_ref, tile_spmm_ref
+
+
+def densify_tiles(tiles: TileSet, edge_weight: Optional[np.ndarray] = None):
+    """Build dense per-tile adjacency blocks A (T, Dmax, Smax).
+
+    A[t, d, s] = sum of weights of edges (s -> d) in tile t (1.0 default).
+    Also returns the FIRST/LAST flags.  numpy, one-time preprocessing —
+    the analogue of the paper's offline tiling pass.
+    """
+    T, S = tiles.edge_src.shape
+    D = int(tiles.part_size.max())
+    Smax = tiles.s_max
+    adj = np.zeros((T, D, Smax), np.float32)
+    for t in range(T):
+        ne = int(tiles.n_edge[t])
+        w = np.ones(ne, np.float32) if edge_weight is None else \
+            edge_weight[tiles.edge_gid[t, :ne]]
+        np.add.at(adj[t], (tiles.edge_dst[t, :ne], tiles.edge_src[t, :ne]), w)
+    return adj, tile_flags(tiles.part_id)
+
+
+def gather_sources(tiles: TileSet, x) -> jnp.ndarray:
+    """(T, Smax, F) compacted source features (sparse tiling's gather)."""
+    return jnp.asarray(x)[jnp.asarray(tiles.src_ids)]
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "use_pallas", "interpret"))
+def spmm(adj, xsrc, part_id, flags, *, n_parts: int, use_pallas: bool = True,
+         interpret: bool = True):
+    if use_pallas:
+        return tile_spmm_pallas(adj, xsrc, part_id, flags, n_parts=n_parts,
+                                interpret=interpret)
+    return tile_spmm_ref(adj, xsrc, part_id, n_parts)
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "use_pallas", "interpret"))
+def gat_aggregate(scores, vals, part_id, flags, *, n_parts: int,
+                  use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return segment_softmax_pallas(scores, vals, part_id, flags,
+                                      n_parts=n_parts, interpret=interpret)
+    return segment_softmax_ref(scores, vals, part_id, n_parts)

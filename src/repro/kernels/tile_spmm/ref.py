@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for tiled SpMM (gather -> aggregate per destination).
+
+Given ZIPPER tiles in block-dense form — per tile a dense adjacency block
+A (Dmax, Smax) over the compacted sources and the gathered source features
+X (Smax, F) — the reference accumulates  out[p] = sum_{tiles t of p} A_t X_t.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tile_spmm_ref(adj, xsrc, part_id, n_parts: int):
+    """adj: (T, D, S); xsrc: (T, S, F); part_id: (T,) -> out (P, D, F)."""
+    T, D, S = adj.shape
+    F = xsrc.shape[-1]
+    out = jnp.zeros((n_parts, D, F), jnp.float32)
+    contrib = jnp.einsum("tds,tsf->tdf", adj.astype(jnp.float32),
+                         xsrc.astype(jnp.float32))
+    return out.at[part_id].add(contrib)
+
+
+def segment_softmax_ref(scores, vals, part_id, n_parts: int):
+    """Online-softmax aggregation oracle.
+
+    scores: (T, D, S) masked with -inf where no edge; vals: (T, S, F).
+    out[p, d] = sum_e softmax(scores over all tiles of p at row d) * vals.
+    """
+    T, D, S = scores.shape
+    F = vals.shape[-1]
+    s = scores.astype(jnp.float32)
+    # global per-(partition,row) max and sum across that partition's tiles
+    neg = -1e30
+    m = jnp.full((n_parts, D), neg).at[part_id].max(s.max(-1))
+    m = jnp.maximum(m, neg)
+    p = jnp.exp(s - m[part_id][..., None])
+    p = jnp.where(s > neg / 2, p, 0.0)
+    l = jnp.zeros((n_parts, D)).at[part_id].add(p.sum(-1))
+    acc = jnp.zeros((n_parts, D, F)).at[part_id].add(
+        jnp.einsum("tds,tsf->tdf", p, vals.astype(jnp.float32)))
+    return acc / jnp.maximum(l, 1e-30)[..., None]

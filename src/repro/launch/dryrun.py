@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+__doc__ = """Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  * build abstract params / optimizer / cache / batch (ShapeDtypeStruct with
+    NamedSharding — zero allocation),
+  * ``jax.jit(step).lower(...).compile()`` against the production mesh,
+  * record ``memory_analysis()`` (proves it fits), ``cost_analysis()``
+    (FLOPs/bytes for §Roofline) and the collective-op byte census parsed
+    from the optimized HLO.
+
+Results land in ``reports/dryrun/<mesh>/<arch>__<shape>.json`` (resumable:
+existing cells are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both            # full sweep
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs.base import SHAPES, all_configs, get_config, shape_applicable
+from .mesh import make_production_mesh
+from .steps import abstract_state, make_decode_step, make_prefill_step, make_train_step
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_census(hlo_text: str):
+    """Sum result bytes of collective ops in post-SPMD HLO (per device)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, op = m.groups()
+        if tuple_body is not None:
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tuple_body))
+        else:
+            b = _shape_bytes(dtype, dims)
+        out[op] += b
+        counts[op] += 1
+    return out, counts
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    d = {}
+    for k in keys:
+        try:
+            d[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return d
+
+
+def _lower_step(cfg, mesh, shape, kind):
+    if kind == "train":
+        params, opt, _, batch = abstract_state(cfg, mesh, shape, with_opt=True)
+        step = make_train_step(cfg, mesh)
+        return jax.jit(step, donate_argnums=(0, 1)).lower(params, opt, batch)
+    if kind == "prefill":
+        params, _, _, batch = abstract_state(cfg, mesh, shape, with_opt=False)
+        step = make_prefill_step(cfg, mesh)
+        return jax.jit(step).lower(params, batch)
+    params, _, cache, batch = abstract_state(cfg, mesh, shape, with_opt=False)
+    step = make_decode_step(cfg, mesh)
+    pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+    return jax.jit(step, donate_argnums=(1,)).lower(params, cache, batch["tokens"], pos)
+
+
+def _probe_costs(cfg, mesh, shape, kind) -> dict:
+    """Python-unrolled 1/2-layer probes -> extrapolated per-step totals.
+
+    XLA's cost_analysis does not scale while-loop bodies by trip count, so
+    FLOPs/bytes/collectives are measured on unrolled probes and extrapolated:
+      total = f(base) + sum_s (L_s - 1) * (f(stack s -> 2) - f(base)).
+
+    SSM/hybrid sequence work is linear in S (chunked SSD / mLSTM; the hybrid
+    shared attention is windowed at 4096), but fully unrolling 32k/128 = 256
+    chunk bodies per layer makes compiles intractable — those cells probe at
+    S=4096 and scale the sequence-proportional totals by S/4096 (recorded as
+    ``seq_scale``).
+    """
+    from ..configs.base import SHAPES
+    from ..models.lm import layer_stack_sizes
+    from .. import runtime_flags
+
+    sizes = layer_stack_sizes(cfg)
+    S, B, _ = SHAPES[shape]
+    seq_scale = 1.0
+    probe_shape = shape
+    if cfg.family in ("ssm", "hybrid") and kind in ("train", "prefill") and S > 8192:
+        SHAPES["__probe__"] = (4096, B, kind)
+        probe_shape = "__probe__"
+        seq_scale = S / 4096.0
+
+    def measure(stack_counts):
+        runtime_flags.PROBE["stack_counts"] = stack_counts
+        runtime_flags.PROBE["unroll"] = True
+        try:
+            compiled = _lower_step(cfg, mesh, probe_shape, kind).compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
+            coll, _ = collective_census(compiled.as_text())
+            return {"flops": float(cost.get("flops", 0)),
+                    "bytes": float(cost.get("bytes accessed", 0)),
+                    **{f"coll_{k}": float(v) for k, v in coll.items()}}
+        finally:
+            runtime_flags.PROBE["stack_counts"] = None
+            runtime_flags.PROBE["unroll"] = False
+
+    try:
+        base_counts = {s: 1 for s in sizes}
+        base = measure(base_counts)
+        total = dict(base)
+        per_stack = {}
+        for s, L in sizes.items():
+            if L <= 1:
+                continue
+            two = measure({**base_counts, s: 2})
+            delta = {k: two[k] - base[k] for k in base}
+            per_stack[s] = delta
+            for k in total:
+                total[k] += (L - 1) * delta[k]
+        if seq_scale != 1.0:
+            total = {k: v * seq_scale for k, v in total.items()}
+        return {"totals": total, "base": base, "per_stack_delta": per_stack,
+                "stack_sizes": sizes, "seq_scale": seq_scale}
+    finally:
+        SHAPES.pop("__probe__", None)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
+             probe: bool = True) -> dict:
+    cfg = get_config(arch)
+    outdir = REPORT_DIR / mesh_kind
+    outdir.mkdir(parents=True, exist_ok=True)
+    outfile = outdir / f"{arch}__{shape}.json"
+    if outfile.exists() and not force:
+        return json.loads(outfile.read_text())
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "skipped", "reason": reason}
+        outfile.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    S, B, kind = SHAPES[shape]
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "kind": kind,
+           "seq_len": S, "global_batch": B,
+           "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+           "n_devices": int(mesh.devices.size)}
+    try:
+        lowered = _lower_step(cfg, mesh, shape, kind)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        mem = _mem_dict(compiled.memory_analysis())
+        coll_bytes, coll_counts = collective_census(compiled.as_text())
+        rec.update(status="ok", lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                   flops=float(cost.get("flops", -1)),
+                   hlo_bytes_accessed=float(cost.get("bytes accessed", -1)),
+                   cost_analysis={k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float)) and (
+                                      "bytes" in k or k in ("flops", "transcendentals",
+                                                            "optimal_seconds"))},
+                   memory=mem, collective_bytes=coll_bytes,
+                   collective_counts=coll_counts)
+        if probe and mesh_kind == "single":
+            rec["probe"] = _probe_costs(cfg, mesh, shape, kind)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    outfile.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multipod", "both"), default="both")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = sorted(all_configs()) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                msg = (f"[{mesh_kind:8s}] {arch:20s} {shape:12s} {st:8s}")
+                if st == "ok":
+                    msg += (f" flops={rec['flops']:.3e} "
+                            f"coll={sum(rec['collective_bytes'].values())/1e9:.2f}GB "
+                            f"compile={rec['compile_s']:.0f}s")
+                elif st == "error":
+                    msg += " " + rec["error"][:120]
+                print(msg, flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

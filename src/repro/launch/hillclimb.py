@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+__doc__ = """§Perf hillclimb driver.
+
+Re-lowers the three chosen (arch × shape) cells with optimization variants
+and records the roofline deltas next to the recorded baselines.  Variants
+are combinations of:
+
+  attn_batch_shard  — shard attention over batch on the model axis when
+                      heads don't divide it (smollm's 9 heads on 16)
+  moe_rs_combine    — reduce-scatter MoE combine + thin return all_to_all
+  mb<N>             — gradient accumulation over N microbatches
+  cap<F>            — MoE capacity factor override
+
+Each variant writes reports/dryrun/hillclimb/<cell>__<variant>.json with
+the same schema as the baseline cells, so benchmarks.roofline can analyze
+them side by side.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell deepseek-v2-236b/train_4k \
+      --variant moe_rs_combine
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from .. import runtime_flags
+from ..configs.base import SHAPES, get_config
+from .dryrun import REPORT_DIR, _mem_dict, _probe_costs, collective_census
+from .mesh import make_production_mesh
+from .steps import abstract_state, make_decode_step, make_prefill_step, make_train_step
+
+
+def run_variant(arch: str, shape: str, variant: str, *, force: bool = False) -> dict:
+    outdir = REPORT_DIR / "hillclimb"
+    outdir.mkdir(parents=True, exist_ok=True)
+    outfile = outdir / f"{arch}__{shape}__{variant}.json"
+    if outfile.exists() and not force:
+        return json.loads(outfile.read_text())
+
+    cfg = get_config(arch)
+    microbatches = 1
+    flags = dict(runtime_flags.OPT)
+    for part in variant.split("+"):
+        if part.startswith("mb"):
+            microbatches = int(part[2:])
+        elif part.startswith("cap"):
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(part[3:])))
+        elif part in runtime_flags.OPT:
+            flags[part] = True
+        elif part == "baseline":
+            pass
+        else:
+            raise ValueError(f"unknown variant token {part}")
+
+    mesh = make_production_mesh(multi_pod=False)
+    S, B, kind = SHAPES[shape]
+    rec = {"arch": arch, "shape": shape, "variant": variant, "kind": kind,
+           "n_devices": int(mesh.devices.size), "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    old = dict(runtime_flags.OPT)
+    runtime_flags.OPT.update(flags)
+    t0 = time.time()
+    try:
+        if kind == "train":
+            params, opt, _, batch = abstract_state(cfg, mesh, shape, with_opt=True)
+            step = make_train_step(cfg, mesh, microbatches=microbatches,
+                                   accum_dtype=jax.numpy.bfloat16
+                                   if cfg.moe else jax.numpy.float32)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params, opt, batch)
+        elif kind == "prefill":
+            params, _, _, batch = abstract_state(cfg, mesh, shape, with_opt=False)
+            lowered = jax.jit(make_prefill_step(cfg, mesh)).lower(params, batch)
+        else:
+            params, _, cache, batch = abstract_state(cfg, mesh, shape, with_opt=False)
+            pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            lowered = jax.jit(make_decode_step(cfg, mesh), donate_argnums=(1,)).lower(
+                params, cache, batch["tokens"], pos)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        coll, counts = collective_census(compiled.as_text())
+        rec.update(status="ok", compile_s=round(time.time() - t0, 1),
+                   flops=float(cost.get("flops", -1)),
+                   hlo_bytes_accessed=float(cost.get("bytes accessed", -1)),
+                   memory=_mem_dict(compiled.memory_analysis()),
+                   collective_bytes=coll, collective_counts=counts)
+        # probe (unrolled cost extrapolation) under the same flags
+        rec["probe"] = _probe_costs(cfg, mesh, shape, kind)
+        if microbatches > 1:
+            # the microbatch scan is a while loop the probe counts once:
+            # scale the per-microbatch totals up (the optimizer's own FLOPs
+            # are over-scaled by this, but they are << the model FLOPs)
+            rec["probe"]["totals"] = {k: v * microbatches
+                                      for k, v in rec["probe"]["totals"].items()}
+            rec["microbatches"] = microbatches
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    finally:
+        runtime_flags.OPT.update(old)
+    outfile.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch/shape")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    arch, shape = args.cell.split("/")
+    rec = run_variant(arch, shape, args.variant, force=args.force)
+    if rec["status"] == "ok":
+        tot = rec.get("probe", {}).get("totals", {})
+        coll = sum(v for k, v in tot.items() if k.startswith("coll_"))
+        print(f"{arch}/{shape} [{args.variant}] ok "
+              f"flops={tot.get('flops', rec['flops']):.3e} coll={coll/1e9:.1f}GB/dev "
+              f"temp={rec['memory'].get('temp_size_in_bytes',0)/2**30:.1f}GB "
+              f"compile={rec['compile_s']}s")
+    else:
+        print(f"{arch}/{shape} [{args.variant}] ERROR: {rec['error'][:200]}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Step factories: train_step / prefill_step / decode_step closures for one
+(arch, mesh) pair.  Shared by the real trainer (train.py), the dry-run
+(dryrun.py) and the smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from ..models.common import abstractify, materialize, stack_templates
+from ..optim.adamw import AdamWState, adamw_update, adamw_update_impl
+from ..optim.schedule import wsd_schedule
+
+Array = Any
+
+
+def opt_state_bits(cfg: ArchConfig) -> int:
+    """8-bit moments for the huge-expert models (fits a 256-chip pod)."""
+    return 8 if (cfg.moe and cfg.param_count() > 1e11) else 32
+
+
+def maybe_fsdp(tmpl):
+    """OPT["fsdp_params"]: also shard every param's largest unsharded dim
+    (size >= 256, so layer-stack dims are skipped) over the data axes.
+    GSPMD inserts the per-layer all-gather in forward and produces grads
+    reduce-scattered — ZeRO-3 semantics from sharding specs alone."""
+    from .. import runtime_flags
+    from ..models.common import DP, ParamLeaf, is_leaf
+
+    if not runtime_flags.OPT["fsdp_params"]:
+        return tmpl
+
+    def f(l: ParamLeaf):
+        if any(s == DP for s in l.spec):
+            return l  # already data-sharded (e.g. expert-parallel weights)
+        cand = [i for i, s in enumerate(l.spec) if s is None and l.shape[i] >= 256]
+        if not cand:
+            return l
+        i = max(cand, key=lambda j: l.shape[j])
+        return ParamLeaf(l.shape, l.spec[:i] + (DP,) + l.spec[i + 1:],
+                         l.init, l.scale, l.dtype)
+
+    return jax.tree.map(f, tmpl, is_leaf=is_leaf)
+
+
+def make_train_step(cfg: ArchConfig, mesh, *, peak_lr: float = 3e-4,
+                    total_steps: int = 10_000, microbatches: int = 1,
+                    accum_dtype=jnp.float32):
+    """``microbatches > 1``: gradient accumulation over batch splits — the
+    activation working set shrinks ~linearly while the optimizer math is
+    unchanged (§Perf memory lever; accumulate in bf16 for the MoE giants
+    where even the fp32 accumulator would not fit)."""
+    bits = opt_state_bits(cfg)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss(p, b):
+            return lm.loss_fn(cfg, p, b, mesh=mesh)
+
+        if microbatches == 1:
+            lval, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            from .. import runtime_flags
+            from ..models.common import is_leaf as _is_leaf
+            from ..optim.adamw import adamw_state_template
+
+            constrain = lambda tree: tree
+            if runtime_flags.OPT["zero1_opt_state"]:
+                # shard the gradient accumulator like the (ZeRO-1) moments:
+                # each microbatch's grad lands via reduce-scatter, and the
+                # resident accumulator shrinks by the data-axis size
+                from ..models.common import abstractify
+                mom = adamw_state_template(maybe_fsdp(lm.model_template(cfg)))["m"]
+                accum_sh = jax.tree.map(lambda a: a.sharding,
+                                        abstractify(mom, mesh), is_leaf=None)
+
+                def constrain(tree):
+                    return jax.tree.map(jax.lax.with_sharding_constraint,
+                                        tree, accum_sh)
+
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            acc0 = (jnp.zeros((), jnp.float32),
+                    constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                                           params)))
+
+            def body(acc, b):
+                l, g = jax.value_and_grad(loss)(params, b)
+                gsum = constrain(jax.tree.map(
+                    lambda a, x: a + x.astype(accum_dtype), acc[1], g))
+                return (acc[0] + l, gsum), None
+
+            (lsum, gsum), _ = jax.lax.scan(body, acc0, mb)
+            lval = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        lr = wsd_schedule(opt_state.step, peak_lr=peak_lr, total=total_steps)
+        from .. import runtime_flags
+        if runtime_flags.OPT["zero1_opt_state"]:
+            from ..models.common import abstractify
+            from ..optim.adamw import adamw_state_template
+            mom = adamw_state_template(maybe_fsdp(lm.model_template(cfg)))["m"]
+            upd_sh = jax.tree.map(lambda a: a.sharding, abstractify(mom, mesh))
+            params, opt_state, gnorm = adamw_update_impl(
+                params, opt_state, grads, lr, state_bits=bits,
+                update_shardings=upd_sh)
+        else:
+            params, opt_state, gnorm = adamw_update(params, opt_state, grads, lr,
+                                                    state_bits=bits)
+        metrics = {"loss": lval, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh):
+    def prefill_step(params, batch):
+        out = lm.forward(cfg, params, batch, mesh=mesh)
+        logits = out[0] if cfg.family == "moe" else out
+        return logits[:, -1]  # next-token logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh):
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = lm.decode_step(cfg, params, cache, tokens, pos, mesh=mesh)
+        return logits[:, -1], cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for lowering (the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg: ArchConfig, mesh, shape_name: str, *, with_opt: bool):
+    """(params_abs, opt_abs_or_None, cache_abs_or_None) for one cell."""
+    from ..configs.base import SHAPES
+    from ..data.pipeline import make_batch_specs
+    from ..optim.adamw import adamw_state_template
+
+    S, B, kind = SHAPES[shape_name]
+    tmpl = maybe_fsdp(lm.model_template(cfg))
+    params_abs = abstractify(tmpl, mesh)
+    opt_abs = None
+    if with_opt:
+        ot = adamw_state_template(tmpl, state_bits=opt_state_bits(cfg))
+        flat = abstractify(ot, mesh)
+        opt_abs = AdamWState(step=flat["step"], m=flat["m"], v=flat["v"],
+                             m_scale=flat["m_scale"], v_scale=flat["v_scale"])
+    cache_abs = None
+    if kind == "decode":
+        ct = lm.cache_template(cfg, B, S)
+        cache_abs = abstractify(ct, mesh)
+    batch_abs = make_batch_specs(cfg, shape_name, mesh)
+    return params_abs, opt_abs, cache_abs, batch_abs

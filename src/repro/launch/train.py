@@ -1,0 +1,84 @@
+"""Training launcher: end-to-end driver with checkpoint/restart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50 \
+      --reduced --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+``--reduced`` runs the smoke-scale config on local devices (the CPU path of
+examples/quickstart.py).  At full scale the same driver runs under the
+production mesh; nothing in the loop is CPU-specific: the data pipeline is
+host-local, checkpointing is per-host, restart is automatic from the latest
+committed step.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpointing import CheckpointManager
+from ..configs import get_config, reduced
+from ..data.pipeline import TokenPipeline
+from ..models import lm
+from ..models.common import materialize, spec_tree
+from ..optim.adamw import adamw_init
+from .mesh import make_host_mesh, make_production_mesh
+from .steps import make_train_step, opt_state_bits
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = (make_production_mesh() if args.production_mesh else make_host_mesh())
+
+    pipe = TokenPipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    tmpl = lm.model_template(cfg)
+    params = materialize(jax.random.PRNGKey(0), tmpl,
+                         dtype_override="float32" if args.reduced else None)
+    opt_state = adamw_init(params, state_bits=opt_state_bits(cfg))
+    start = 0
+
+    ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None
+    if ckpt is not None:
+        restored = ckpt.restore_latest({"params": params, "opt": opt_state})
+        if restored[0] is not None:
+            start = restored[0] + 1
+            params, opt_state = restored[1]["params"], restored[1]["opt"]
+            print(f"resumed from step {restored[0]}")
+
+    step_fn = jax.jit(make_train_step(cfg, mesh, peak_lr=args.lr,
+                                      total_steps=args.steps),
+                      donate_argnums=(0, 1))
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.global_batch_at(step).items()}
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        if ckpt is not None:
+            ckpt.maybe_save(step, {"params": params, "opt": opt_state})
+        print(f"step {step:5d} loss {loss:8.4f} gnorm {float(metrics['grad_norm']):8.3f} "
+              f"lr {float(metrics['lr']):.2e} {time.time()-t0:6.2f}s", flush=True)
+    if ckpt is not None:
+        ckpt.maybe_save(args.steps - 1, {"params": params, "opt": opt_state}, force=True)
+        ckpt.wait()
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Shared model substrate: param templates (+ sharding specs), norms, RoPE.
+
+Parameters are declared as :class:`ParamLeaf` templates carrying shape,
+dtype, init scale **and** the logical PartitionSpec.  The same template tree
+serves both worlds:
+
+* ``materialize(key, tree)``        -> real arrays (CPU smoke tests / examples)
+* ``abstractify(tree, mesh)``       -> ShapeDtypeStructs with NamedSharding
+                                        (the multi-pod dry-run; no allocation)
+
+Sharding convention (DESIGN.md §6): ``"model"`` is the tensor-parallel axis,
+``"data"`` (and ``"pod"``) the batch axes.  Specs below name axes logically;
+``dp`` in a spec means "all batch axes" and is resolved against the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Array = Any
+
+DP = "__dp__"    # placeholder resolved to ("pod","data") / ("data",) per mesh
+DPM = "__dpm__"  # ALL mesh axes (batch + model) — batch-sharded attention
+
+
+def resolve_spec(spec: Tuple, mesh) -> P:
+    """Replace the DP/DPM placeholders with concrete mesh axes."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    all_axes = batch_axes + tuple(a for a in ("model",) if a in mesh.axis_names)
+    out = []
+    for s in spec:
+        if s == DP:
+            out.append(batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None))
+        elif s == DPM:
+            out.append(all_axes if len(all_axes) > 1 else (all_axes[0] if all_axes else None))
+        else:
+            out.append(s)
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamLeaf:
+    shape: Tuple[int, ...]
+    spec: Tuple  # logical PartitionSpec entries (None / 'model' / DP)
+    init: str = "normal"     # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+    def fan_in(self) -> int:
+        return self.shape[-2] if len(self.shape) >= 2 else 1
+
+
+def leaf(shape, spec=None, init="normal", scale=None, dtype="bfloat16") -> ParamLeaf:
+    spec = tuple(spec) if spec is not None else (None,) * len(shape)
+    assert len(spec) == len(shape), (shape, spec)
+    return ParamLeaf(tuple(int(s) for s in shape), spec, init, scale, dtype)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, ParamLeaf)
+
+
+def stack_templates(tree, n: int):
+    """Add a leading layer axis (replicated) to every leaf — for scan."""
+    return jax.tree.map(
+        lambda l: ParamLeaf((n,) + l.shape, (None,) + l.spec, l.init, l.scale, l.dtype),
+        tree, is_leaf=is_leaf)
+
+
+def materialize(key, tree, dtype_override: Optional[str] = None):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, l in zip(keys, leaves):
+        dt = jnp.dtype(dtype_override or l.dtype)
+        if l.init == "zeros":
+            out.append(jnp.zeros(l.shape, dt))
+        elif l.init == "ones":
+            out.append(jnp.ones(l.shape, dt))
+        elif l.init == "full":
+            out.append(jnp.full(l.shape, l.scale, dt))
+        else:
+            scale = l.scale if l.scale is not None else 1.0 / np.sqrt(max(l.fan_in(), 1))
+            out.append((jax.random.normal(k, l.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim (e.g. 3 kv heads on
+    a 16-wide model axis) — the leaf falls back to replication on that dim."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def abstractify(tree, mesh, dtype_override: Optional[str] = None):
+    """ShapeDtypeStruct pytree with NamedSharding — zero allocation."""
+    def _one(l: ParamLeaf):
+        spec = sanitize_spec(resolve_spec(l.spec, mesh), l.shape, mesh)
+        sh = NamedSharding(mesh, spec)
+        return jax.ShapeDtypeStruct(l.shape, jnp.dtype(dtype_override or l.dtype), sharding=sh)
+    return jax.tree.map(_one, tree, is_leaf=is_leaf)
+
+
+def spec_tree(tree, mesh):
+    return jax.tree.map(lambda l: resolve_spec(l.spec, mesh), tree, is_leaf=is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    h = x.astype(jnp.float32)
+    mu = h.mean(-1, keepdims=True)
+    var = ((h - mu) ** 2).mean(-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions, sections: Tuple[int, int, int], theta: float):
+    """Multimodal RoPE (Qwen2-VL): head_dim/2 freq slots split into (t, h, w)
+    sections, each rotated by its own position stream.  The modality frontend
+    is a stub, so all three streams carry the text position (structurally
+    faithful; degenerates to 1-D RoPE exactly as it does for text tokens)."""
+    D = x.shape[-1]
+    cos, sin = rope_freqs(D, theta, positions)  # (..., S, D/2)
+    # sections indexes the D/2 frequency slots: build per-slot position choice
+    # (all streams identical under the text-only stub)
+    return apply_rope(x, cos, sin)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+def shard_hint(x, mesh, *spec):
+    """with_sharding_constraint against the logical spec (DP resolved;
+    indivisible axes dropped)."""
+    if mesh is None:
+        return x
+    s = sanitize_spec(resolve_spec(tuple(spec), mesh), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 1e-4):
+    """Mean token CE (fp32) + z-loss for logit drift control."""
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                               axis=-1)[..., 0]
+    ce = lse - gold
+    return (ce + z_loss * lse ** 2).mean()

@@ -1,0 +1,484 @@
+"""Full-model assembly for the 10 assigned architectures.
+
+One template/forward/decode implementation per family:
+
+  dense | vlm     — pre-norm GQA transformer (qk-norm / bias / parallel-block
+                    / M-RoPE options); vlm prepends stub patch embeddings.
+  moe             — DeepSeek: MLA attention + (first_dense dense layers,
+                    then expert-parallel MoE layers).
+  audio           — Whisper enc-dec; conv/mel frontend is a stub (frame
+                    embeddings arrive via the batch).
+  ssm             — xLSTM super-blocks (slstm_every-1 mLSTM + 1 sLSTM).
+  hybrid          — Zamba2 super-blocks (shared_attn_every Mamba2 blocks +
+                    one weight-shared attention/MLP block).
+
+Layers are scanned with stacked parameters (bounded HLO for 61–80-layer
+models) and rematerialized per block for training memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .. import runtime_flags
+from . import attention as A
+from . import mamba2 as M2
+from . import moe as MOE
+from . import xlstm as XL
+from .common import (DP, cross_entropy, layer_norm, leaf, rms_norm,
+                     shard_hint, sinusoidal_positions, stack_templates)
+
+Array = Any
+VLM_PATCHES = 256  # stub vision prefix length for the vlm family
+
+
+def scan_blocks(name: str, fn, carry, xs):
+    """``lax.scan`` over a stacked layer pytree — or, in cost-probe mode, a
+    python loop over the first k layers (so cost_analysis sees the FLOPs)."""
+    stacks = runtime_flags.probe_stacks()
+    if stacks is None:
+        return jax.lax.scan(fn, carry, xs)
+    k = stacks.get(name, 1)
+    ys = []
+    for i in range(k):
+        carry, y = fn(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)  # match scan's stacking
+    else:
+        ys = None
+    return carry, ys
+
+
+def layer_stack_sizes(cfg: ArchConfig) -> Dict[str, int]:
+    """Real trip count of each layer stack — the dry-run extrapolates probe
+    costs with these."""
+    if cfg.family in ("dense", "vlm"):
+        return {"layers": cfg.n_layers}
+    if cfg.family == "moe":
+        d = {"layers": cfg.n_layers - cfg.moe.first_dense}
+        if cfg.moe.first_dense:
+            d["dense_layers"] = cfg.moe.first_dense
+        return d
+    if cfg.family == "audio":
+        return {"layers": cfg.n_layers, "enc_layers": cfg.n_encoder_layers}
+    if cfg.family == "ssm":
+        return {"layers": cfg.n_layers // cfg.xlstm.slstm_every}
+    if cfg.family == "hybrid":
+        return {"layers": cfg.n_layers // cfg.shared_attn_every}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+
+def _dense_block_template(cfg: ArchConfig) -> Dict:
+    return {
+        "ln1": leaf((cfg.d_model,), (None,), init="ones"),
+        "attn": A.gqa_template(cfg),
+        "ln2": leaf((cfg.d_model,), (None,), init="ones"),
+        "ffn": MOE.dense_ffn_template(cfg),
+    }
+
+
+def _mla_block_template(cfg: ArchConfig, kind: str) -> Dict:
+    t = {
+        "ln1": leaf((cfg.d_model,), (None,), init="ones"),
+        "attn": A.mla_template(cfg),
+        "ln2": leaf((cfg.d_model,), (None,), init="ones"),
+    }
+    if kind == "moe":
+        t["moe"] = MOE.moe_template(cfg)
+    else:
+        t["ffn"] = MOE.dense_ffn_template(cfg, cfg.moe.d_ff_dense)
+    return t
+
+
+def _whisper_block_template(cfg: ArchConfig, cross: bool) -> Dict:
+    d = cfg.d_model
+    ln = lambda: {"w": leaf((d,), (None,), init="ones"),
+                  "b": leaf((d,), (None,), init="zeros")}
+    t = {"ln1": ln(), "attn": A.gqa_template(cfg), "ln3": ln(),
+         "ffn": MOE.gelu_ffn_template(cfg)}
+    if cross:
+        t["ln2"] = ln()
+        t["xattn"] = A.gqa_template(cfg)
+    return t
+
+
+def _xlstm_super_template(cfg: ArchConfig) -> Dict:
+    k = cfg.xlstm.slstm_every
+    return {
+        "mlstm": stack_templates({"ln": leaf((cfg.d_model,), (None,), init="ones"),
+                                  "cell": XL.mlstm_template(cfg)}, k - 1),
+        "slstm": {"ln": leaf((cfg.d_model,), (None,), init="ones"),
+                  "cell": XL.slstm_template(cfg)},
+    }
+
+
+def _zamba_super_template(cfg: ArchConfig) -> Dict:
+    return {
+        "mamba": stack_templates({"ln": leaf((cfg.d_model,), (None,), init="ones"),
+                                  "cell": M2.mamba2_template(cfg)},
+                                 cfg.shared_attn_every),
+    }
+
+
+def model_template(cfg: ArchConfig) -> Dict:
+    d, V = cfg.d_model, cfg.vocab
+    t: Dict[str, Any] = {"embed": leaf((V, d), ("model", None), scale=0.02)}
+    if not cfg.tie_embeddings:
+        t["head"] = leaf((d, V), (None, "model"), scale=0.02)
+    t["ln_f"] = leaf((d,), (None,), init="ones")
+
+    if cfg.family in ("dense", "vlm"):
+        t["layers"] = stack_templates(_dense_block_template(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        mo = cfg.moe
+        if mo.first_dense:
+            t["dense_layers"] = stack_templates(_mla_block_template(cfg, "dense"),
+                                                mo.first_dense)
+        t["layers"] = stack_templates(_mla_block_template(cfg, "moe"),
+                                      cfg.n_layers - mo.first_dense)
+    elif cfg.family == "audio":
+        t["enc_layers"] = stack_templates(_whisper_block_template(cfg, cross=False),
+                                          cfg.n_encoder_layers)
+        t["layers"] = stack_templates(_whisper_block_template(cfg, cross=True),
+                                      cfg.n_layers)
+        t["ln_enc"] = {"w": leaf((d,), (None,), init="ones"),
+                       "b": leaf((d,), (None,), init="zeros")}
+        t["ln_f"] = {"w": leaf((d,), (None,), init="ones"),
+                     "b": leaf((d,), (None,), init="zeros")}
+    elif cfg.family == "ssm":
+        n_super = cfg.n_layers // cfg.xlstm.slstm_every
+        t["layers"] = stack_templates(_xlstm_super_template(cfg), n_super)
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        t["layers"] = stack_templates(_zamba_super_template(cfg), n_super)
+        t["shared"] = {"ln1": leaf((d,), (None,), init="ones"),
+                       "attn": A.gqa_template(cfg),
+                       "ln2": leaf((d,), (None,), init="ones"),
+                       "ffn": MOE.dense_ffn_template(cfg)}
+    else:
+        raise ValueError(cfg.family)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _logits(cfg, params, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["head"]
+
+
+def _embed(cfg, params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def forward(cfg: ArchConfig, params: Dict, batch: Dict, *, mesh=None) -> Array:
+    """Returns logits (B, S, vocab) for train/prefill."""
+    tokens = batch["tokens"]
+    B, S_tok = tokens.shape
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    x = shard_hint(x, mesh, DP, None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    if cfg.family in ("dense", "vlm"):
+        def block(h, p):
+            if cfg.parallel_block:  # command-r: attn and FFN in parallel
+                hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+                ao, _ = A.gqa_attention(cfg, p["attn"], hn, positions, mesh=mesh)
+                return h + ao + MOE.dense_ffn(p["ffn"], hn), None
+            ao, _ = A.gqa_attention(cfg, p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                                    positions, mesh=mesh)
+            h = h + ao
+            return h + MOE.dense_ffn(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps)), None
+
+        x, _ = scan_blocks("layers", jax.checkpoint(block), x, params["layers"])
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = _logits(cfg, params, x)
+        return logits[:, -S_tok:] if cfg.family == "vlm" else logits
+
+    if cfg.family == "moe":
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def mla_block(kind):
+            def block(carry, p):
+                h, aux = carry
+                ao, _ = A.mla_attention(cfg, p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                                        positions, mesh=mesh)
+                h = h + ao
+                hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+                if kind == "moe":
+                    y, a = MOE.moe_layer(cfg, p["moe"], hn, mesh=mesh)
+                    return (h + y, aux + a), None
+                return (h + MOE.dense_ffn(p["ffn"], hn), aux), None
+            return block
+
+        carry = (x, aux_total)
+        if cfg.moe.first_dense:
+            carry, _ = scan_blocks("dense_layers", jax.checkpoint(mla_block("dense")), carry,
+                                   params["dense_layers"])
+        carry, _ = scan_blocks("layers", jax.checkpoint(mla_block("moe")), carry, params["layers"])
+        x, aux_total = carry
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = _logits(cfg, params, x)
+        return logits, aux_total
+
+    if cfg.family == "audio":
+        enc = batch["frames"].astype(x.dtype)           # (B, T_enc, d) stub frontend
+        enc = enc + sinusoidal_positions(enc.shape[1], cfg.d_model).astype(enc.dtype)
+
+        def enc_block(h, p):
+            hn = layer_norm(h, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+            ao, _ = A.gqa_attention(cfg, p["attn"], hn, jnp.arange(h.shape[1]),
+                                    mesh=mesh, causal=False, use_rope=False)
+            h = h + ao
+            hn = layer_norm(h, p["ln3"]["w"], p["ln3"]["b"], cfg.norm_eps)
+            return h + MOE.gelu_ffn(p["ffn"], hn), None
+
+        enc, _ = scan_blocks("enc_layers", jax.checkpoint(enc_block), enc, params["enc_layers"])
+        enc = layer_norm(enc, params["ln_enc"]["w"], params["ln_enc"]["b"], cfg.norm_eps)
+
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+
+        def dec_block(h, p):
+            hn = layer_norm(h, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+            ao, _ = A.gqa_attention(cfg, p["attn"], hn, positions, mesh=mesh,
+                                    causal=True, use_rope=False)
+            h = h + ao
+            hn = layer_norm(h, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+            co, _ = A.gqa_attention(cfg, p["xattn"], hn, positions, mesh=mesh,
+                                    causal=False, kv_x=enc, use_rope=False)
+            h = h + co
+            hn = layer_norm(h, p["ln3"]["w"], p["ln3"]["b"], cfg.norm_eps)
+            return h + MOE.gelu_ffn(p["ffn"], hn), None
+
+        x, _ = scan_blocks("layers", jax.checkpoint(dec_block), x, params["layers"])
+        x = layer_norm(x, params["ln_f"]["w"], params["ln_f"]["b"], cfg.norm_eps)
+        return _logits(cfg, params, x)
+
+    if cfg.family == "ssm":
+        def super_block(h, p):
+            def sub(h, pp):
+                y, _ = XL.mlstm_block(cfg, pp["cell"],
+                                      rms_norm(h, pp["ln"], cfg.norm_eps), mesh=mesh)
+                return h + y, None
+            h, _ = jax.lax.scan(sub, h, p["mlstm"])
+            y, _ = XL.slstm_block(cfg, p["slstm"]["cell"],
+                                  rms_norm(h, p["slstm"]["ln"], cfg.norm_eps), mesh=mesh)
+            return h + y, None
+
+        x, _ = scan_blocks("layers", jax.checkpoint(super_block), x, params["layers"])
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _logits(cfg, params, x)
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def super_block(h, p):
+            def sub(h, pp):
+                y, _ = M2.mamba2_block(cfg, pp["cell"],
+                                       rms_norm(h, pp["ln"], cfg.norm_eps), mesh=mesh)
+                return h + y, None
+            h, _ = jax.lax.scan(sub, h, p["mamba"])
+            hn = rms_norm(h, shared["ln1"], cfg.norm_eps)
+            ao, _ = A.gqa_attention(cfg, shared["attn"], hn, positions, mesh=mesh)
+            h = h + ao
+            h = h + MOE.dense_ffn(shared["ffn"], rms_norm(h, shared["ln2"], cfg.norm_eps))
+            return h, None
+
+        x, _ = scan_blocks("layers", jax.checkpoint(super_block), x, params["layers"])
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _logits(cfg, params, x)
+
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict, *, mesh=None) -> Array:
+    out = forward(cfg, params, batch, mesh=mesh)
+    aux = 0.0
+    if cfg.family == "moe":
+        out, aux_total = out
+        if not cfg.moe.aux_free_bias:
+            aux = 1e-3 * aux_total
+    logits, labels = out[:, :-1], batch["tokens"][:, 1:]
+    if cfg.family == "audio":
+        labels = batch["tokens"][:, 1:]
+    return cross_entropy(logits, labels) + aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache templates + decode step
+# ---------------------------------------------------------------------------
+
+def cache_template(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    if cfg.family in ("dense", "vlm"):
+        return {"layers": stack_templates(A.gqa_cache_template(cfg, batch, max_len),
+                                          cfg.n_layers)}
+    if cfg.family == "moe":
+        t = {"layers": stack_templates(A.mla_cache_template(cfg, batch, max_len),
+                                       cfg.n_layers - cfg.moe.first_dense)}
+        if cfg.moe.first_dense:
+            t["dense_layers"] = stack_templates(
+                A.mla_cache_template(cfg, batch, max_len), cfg.moe.first_dense)
+        return t
+    if cfg.family == "audio":
+        return {
+            "layers": stack_templates(A.gqa_cache_template(cfg, batch, max_len),
+                                      cfg.n_layers),
+            # cross-attention K/V precomputed from the encoder output
+            "cross": stack_templates(A.gqa_cache_template(cfg, batch, cfg.enc_len),
+                                     cfg.n_layers),
+        }
+    if cfg.family == "ssm":
+        n_super = cfg.n_layers // cfg.xlstm.slstm_every
+        return {"layers": stack_templates({
+            "mlstm": stack_templates(XL.mlstm_state_template(cfg, batch),
+                                     cfg.xlstm.slstm_every - 1),
+            "slstm": XL.slstm_state_template(cfg, batch),
+        }, n_super)}
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        win = min(cfg.attn_window or max_len, max_len)
+        return {
+            "layers": stack_templates(
+                {"mamba": stack_templates(M2.mamba2_state_template(cfg, batch),
+                                          cfg.shared_attn_every)}, n_super),
+            # weight-shared attention block: one *cache per application site*
+            "shared": stack_templates(A.gqa_cache_template(cfg, batch, win), n_super),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens: Array,
+                pos: Array, *, mesh=None) -> Tuple[Array, Dict]:
+    """One decode step. tokens: (B, 1); pos: scalar index into the cache."""
+    B = tokens.shape[0]
+    x = _embed(cfg, params, tokens)
+    positions = pos + jnp.arange(tokens.shape[1])
+
+    if cfg.family in ("dense", "vlm"):
+        def block(h, pc):
+            p, c = pc
+            ao, c2 = A.gqa_attention(cfg, p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                                     positions, mesh=mesh, cache=c, cache_index=pos)
+            if cfg.parallel_block:
+                hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+                h = h + ao + MOE.dense_ffn(p["ffn"], hn)
+            else:
+                h = h + ao
+                h = h + MOE.dense_ffn(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps))
+            return h, c2
+
+        x, new_cache = scan_blocks("layers", block, x, (params["layers"], cache["layers"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _logits(cfg, params, x), {"layers": new_cache}
+
+    if cfg.family == "moe":
+        def mk(kind):
+            def block(h, pc):
+                p, c = pc
+                ao, c2 = A.mla_attention(cfg, p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                                         positions, mesh=mesh, cache=c, cache_index=pos)
+                h = h + ao
+                hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+                if kind == "moe":
+                    y, _ = MOE.moe_layer(cfg, p["moe"], hn, mesh=mesh, token_chunks=1)
+                    h = h + y
+                else:
+                    h = h + MOE.dense_ffn(p["ffn"], hn)
+                return h, c2
+            return block
+
+        new_cache = {}
+        if cfg.moe.first_dense:
+            x, nc = scan_blocks("dense_layers", mk("dense"), x,
+                                (params["dense_layers"], cache["dense_layers"]))
+            new_cache["dense_layers"] = nc
+        x, nc = scan_blocks("layers", mk("moe"), x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = nc
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _logits(cfg, params, x), new_cache
+
+    if cfg.family == "audio":
+        max_len = int(cache["layers"]["k"].shape[2])
+        x = x + sinusoidal_positions(max_len, cfg.d_model)[pos][None, None, :].astype(x.dtype)
+
+        def block(h, pc):
+            p, c_self, c_cross = pc
+            hn = layer_norm(h, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+            ao, c2 = A.gqa_attention(cfg, p["attn"], hn, positions, mesh=mesh,
+                                     cache=c_self, cache_index=pos, use_rope=False)
+            h = h + ao
+            hn = layer_norm(h, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+            # cross-attn against the precomputed encoder K/V
+            from ..kernels.flash_attention.ops import flash_attention
+            q = (hn @ p["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hdim)
+            co = flash_attention(q, c_cross["k"], c_cross["v"], causal=False)
+            h = h + co.reshape(B, 1, -1) @ p["xattn"]["wo"]
+            hn = layer_norm(h, p["ln3"]["w"], p["ln3"]["b"], cfg.norm_eps)
+            return h + MOE.gelu_ffn(p["ffn"], hn), c2
+
+        x, nc = scan_blocks("layers", block, x, (params["layers"], cache["layers"], cache["cross"]))
+        x = layer_norm(x, params["ln_f"]["w"], params["ln_f"]["b"], cfg.norm_eps)
+        return _logits(cfg, params, x), {"layers": nc, "cross": cache["cross"]}
+
+    if cfg.family == "ssm":
+        def super_block(h, pc):
+            p, c = pc
+
+            def sub(h, pcc):
+                pp, cc = pcc
+                y, c2 = XL.mlstm_block(cfg, pp["cell"], rms_norm(h, pp["ln"], cfg.norm_eps),
+                                       mesh=mesh, state=cc)
+                return h + y, c2
+            h, nc_m = jax.lax.scan(sub, h, (p["mlstm"], c["mlstm"]))
+            y, nc_s = XL.slstm_block(cfg, p["slstm"]["cell"],
+                                     rms_norm(h, p["slstm"]["ln"], cfg.norm_eps),
+                                     mesh=mesh, state=c["slstm"])
+            return h + y, {"mlstm": nc_m, "slstm": nc_s}
+
+        x, nc = scan_blocks("layers", super_block, x, (params["layers"], cache["layers"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _logits(cfg, params, x), {"layers": nc}
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        win = cache["shared"]["k"].shape[2]
+        # position within the ring buffer of the sliding-window cache
+        wpos = jnp.mod(pos, win)
+
+        def super_block(h, pc):
+            p, c_m, c_a = pc
+
+            def sub(h, pcc):
+                pp, cc = pcc
+                y, c2 = M2.mamba2_block(cfg, pp["cell"], rms_norm(h, pp["ln"], cfg.norm_eps),
+                                        mesh=mesh, state=cc)
+                return h + y, c2
+            h, nc_m = jax.lax.scan(sub, h, (p["mamba"], c_m["mamba"]))
+            hn = rms_norm(h, shared["ln1"], cfg.norm_eps)
+            ao, c_a2 = A.gqa_attention(cfg, shared["attn"], hn, positions, mesh=mesh,
+                                       cache=c_a, cache_index=wpos)
+            h = h + ao
+            h = h + MOE.dense_ffn(shared["ffn"], rms_norm(h, shared["ln2"], cfg.norm_eps))
+            return h, ({"mamba": nc_m}, c_a2)
+
+        x, (nc_m, nc_a) = scan_blocks("layers", super_block, x,
+                                      (params["layers"], cache["layers"], cache["shared"]))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _logits(cfg, params, x), {"layers": nc_m, "shared": nc_a}
+
+    raise ValueError(cfg.family)

@@ -1,0 +1,173 @@
+"""Mamba2 (SSD) block — chunked selective-state-space layer (Zamba2 backbone).
+
+The chunked SSD algorithm is ZIPPER's tiling transplanted to the sequence
+axis: chunks are tiles; the intra-chunk quadratic part is the compute-bound
+"GEMM" phase and the inter-chunk state scan is the memory-bound recurrent
+phase; ``lax.scan`` over chunks pipelines them (DESIGN.md §4/§5).
+
+Shapes follow the Mamba2 paper: d_inner = expand·d, heads = d_inner/head_dim,
+scalar decay A per head, grouped B/C (n_groups).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import DP, leaf, rms_norm, shard_hint
+
+Array = Any
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_ch
+
+
+def mamba2_template(cfg: ArchConfig) -> Dict:
+    s, di, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    return {
+        # [z (di), xBC (di + 2*G*N), dt (nh)]
+        "w_in": leaf((d, 2 * di + 2 * s.n_groups * s.d_state + nh), (None, "model")),
+        "conv_w": leaf((s.d_conv, conv_ch), (None, "model"), scale=0.5),
+        "conv_b": leaf((conv_ch,), ("model",), init="zeros"),
+        "dt_bias": leaf((nh,), ("model",), init="zeros"),
+        "a_log": leaf((nh,), ("model",), init="ones"),
+        "d_skip": leaf((nh,), ("model",), init="ones"),
+        "norm_w": leaf((di,), ("model",), init="ones"),
+        "w_out": leaf((di, d), ("model", None)),
+    }
+
+
+def mamba2_state_template(cfg: ArchConfig, batch: int) -> Dict:
+    s, di, nh, conv_ch = _dims(cfg)
+    return {
+        "ssm": leaf((batch, nh, s.head_dim, s.d_state), (DP, "model", None, None), init="zeros"),
+        "conv": leaf((batch, s.d_conv - 1, conv_ch), (DP, None, "model"), init="zeros"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s, di, nh, conv_ch = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_ch]
+    dt = zxbcdt[..., di + conv_ch:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state: Optional[Array] = None):
+    """Depthwise causal conv along time. xbc: (B,S,C); conv_w: (W,C)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)            # (B, S+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(W))
+    out = jax.nn.silu(out + conv_b)
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return out, new_state
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  (B, S, nh, hd)    dt: (B, S, nh)   A: (nh,) (negative)
+    Bm/Cm: (B, S, G, N);  heads are grouped G | nh.
+    Returns y (B, S, nh, hd) and final state (B, nh, hd, N).
+    """
+    Bsz, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    L = min(chunk, S)
+    nchunk = -(-S // L)
+    pad = nchunk * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xs = x.reshape(Bsz, nchunk, L, nh, hd).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(Bsz, nchunk, L, nh).transpose(1, 0, 2, 3)
+    Bs = Bm.reshape(Bsz, nchunk, L, G, N).transpose(1, 0, 2, 3, 4)
+    Cs = Cm.reshape(Bsz, nchunk, L, G, N).transpose(1, 0, 2, 3, 4)
+
+    h0 = (jnp.zeros((Bsz, nh, hd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(h, inp):
+        xc, dtc, Bc, Cc = inp                         # (B,L,nh,hd) (B,L,nh) (B,L,G,N)
+        dA = dtc * A[None, None, :]                    # (B,L,nh) negative
+        cum = jnp.cumsum(dA, axis=1)                   # (B,L,nh)
+        Bh = jnp.repeat(Bc, rep, axis=2)               # (B,L,nh,N)
+        Ch = jnp.repeat(Cc, rep, axis=2)
+        # intra-chunk (the "GEMM tile"): attention-like lower-tri matrix
+        scores = jnp.einsum("blhn,bshn->bhls", Ch, Bh)  # (B,nh,L,L)
+        decay = cum[:, :, None, :].transpose(0, 3, 1, 2) - cum[:, None, :, :].transpose(0, 3, 1, 2)
+        # decay[b,h,l,s] = cum[b,l,h] - cum[b,s,h]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(mask, jnp.exp(decay) , 0.0) * scores
+        xdt = xc * dtc[..., None]                      # (B,L,nh,hd)
+        y_intra = jnp.einsum("bhls,bshd->blhd", w, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("blhn,bhdn->blhd", Ch * jnp.exp(cum)[..., None], h)
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)           # (B,L,nh)
+        chunk_state = jnp.einsum("bshd,bshn->bhdn", xdt * tail[..., None], Bh)
+        h_new = h * jnp.exp(dA.sum(1))[:, :, None, None] + chunk_state
+        return h_new, y_intra + y_inter
+
+    from .. import runtime_flags
+    # checkpointed chunk body: bwd recomputes the intra-chunk (L,L) decay
+    # matrices instead of saving one per chunk (carry is the small state)
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0,
+                               (xs.astype(jnp.float32), dts.astype(jnp.float32),
+                                Bs.astype(jnp.float32), Cs.astype(jnp.float32)),
+                               unroll=runtime_flags.probe_unroll())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nchunk * L, nh, hd)[:, :S]
+    return y, h_final
+
+
+def mamba2_block(cfg: ArchConfig, p: Dict, x: Array, *, mesh=None,
+                 state: Optional[Dict] = None) -> Tuple[Array, Optional[Dict]]:
+    """x: (B, S, d) -> (B, S, d). With ``state``: single-step decode
+    (S should be 1), returning the updated recurrent+conv state."""
+    s, di, nh, conv_ch = _dims(cfg)
+    B, S, d = x.shape
+    zxbcdt = x @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di].reshape(B, S, nh, s.head_dim)
+    Bm = xbc[..., di:di + s.n_groups * s.d_state].reshape(B, S, s.n_groups, s.d_state)
+    Cm = xbc[..., di + s.n_groups * s.d_state:].reshape(B, S, s.n_groups, s.d_state)
+
+    if state is None:
+        y, _ = _ssd_chunked(xs, dt, A, Bm, Cm, s.chunk)
+        new_state = None
+    else:
+        # single-step recurrence: h = h*exp(dt*A) + dt*B x ; y = C·h
+        h = state["ssm"].astype(jnp.float32)           # (B,nh,hd,N)
+        rep = nh // s.n_groups
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)         # (B,nh,N)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dt0 = dt[:, 0]                                  # (B,nh)
+        xdt = xs[:, 0].astype(jnp.float32) * dt0[..., None]  # (B,nh,hd)
+        h = h * jnp.exp(dt0 * A)[:, :, None, None] + jnp.einsum("bhd,bhn->bhdn", xdt, Bh.astype(jnp.float32))
+        y = jnp.einsum("bhdn,bhn->bhd", h, Ch.astype(jnp.float32))[:, None]
+        new_state = {"ssm": h, "conv": new_conv}
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    y = shard_hint(y, mesh, DP, None, "model")
+    return y @ p["w_out"], new_state

@@ -1,0 +1,249 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, step recurrence).  [arXiv:2405.04517]
+
+mLSTM uses exponential input gates with the paper's max-stabilizer m_t; we
+implement the exact stabilized recurrence in chunked form — chunks are the
+ZIPPER tiles of the sequence axis (intra-chunk matmuls on the MXU, the
+inter-chunk state scan is the recurrent phase), mirroring mamba2.py.
+
+State per mLSTM head: (C: dk×dv matrix memory, n: dk normalizer, m: scalar
+max-stabilizer) — stored as Ĉ,n̂ with true value Ĉ·exp(m).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import DP, leaf, rms_norm, shard_hint
+
+Array = Any
+
+
+def _mdims(cfg: ArchConfig):
+    xc = cfg.xlstm
+    di = int(cfg.d_model * xc.proj_factor)
+    nh = cfg.n_heads
+    dk = di // nh
+    return xc, di, nh, dk
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_template(cfg: ArchConfig) -> Dict:
+    xc, di, nh, dk = _mdims(cfg)
+    d = cfg.d_model
+    return {
+        "w_up": leaf((d, 2 * di), (None, "model")),        # [x_inner, z-gate]
+        "conv_w": leaf((xc.conv_width, di), (None, "model"), scale=0.5),
+        "conv_b": leaf((di,), ("model",), init="zeros"),
+        "wq": leaf((di, di), (None, "model")),
+        "wk": leaf((di, di), (None, "model")),
+        "wv": leaf((di, di), (None, "model")),
+        "w_if": leaf((di, 2 * nh), (None, "model")),       # input/forget gate logits
+        "b_if": leaf((2 * nh,), ("model",), init="zeros"),
+        "norm_w": leaf((di,), ("model",), init="ones"),
+        "w_down": leaf((di, d), ("model", None)),
+    }
+
+
+def mlstm_state_template(cfg: ArchConfig, batch: int) -> Dict:
+    xc, di, nh, dk = _mdims(cfg)
+    return {
+        "C": leaf((batch, nh, dk, dk), (DP, "model", None, None), init="zeros"),
+        "n": leaf((batch, nh, dk), (DP, "model", None), init="zeros"),
+        # the max-stabilizer starts at -inf (matches the chunked prefill init)
+        "m": leaf((batch, nh), (DP, "model"), init="full", scale=-1e30),
+        "conv": leaf((batch, xc.conv_width - 1, di), (DP, None, "model"), init="zeros"),
+    }
+
+
+def _chunked_mlstm(q, k, v, ig, fg, chunk: int, state=None):
+    """Stabilized chunkwise mLSTM.
+
+    q/k/v: (B, S, nh, dk); ig/fg: (B, S, nh) raw gate logits.
+    Returns h (B,S,nh,dk) and final (C,n,m) state.
+    """
+    B, S, nh, dk = q.shape
+    L = min(chunk, S)
+    nchunk = -(-S // L)
+    pad = nchunk * L - S
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)))
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+
+    def chunks(t):  # (B, S, ...) -> (nc, B, L, ...)
+        return t.reshape((B, nchunk, L) + t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = chunks(q), chunks(k), chunks(v)
+    igs, fgs = chunks(ig), chunks(fg)
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, dk, dk), jnp.float32)
+        n0 = jnp.zeros((B, nh, dk), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    scale = dk ** -0.5
+
+    def body(carry, inp):
+        C, n, m_prev = carry
+        qc, kc, vc, a, g = inp          # a: input-gate logits, g: log-forget
+        g = jax.nn.log_sigmoid(g.astype(jnp.float32))       # (B,L,nh)
+        a = a.astype(jnp.float32)
+        Bcum = jnp.cumsum(g, axis=1)                        # (B,L,nh)
+        # weight(t,s) = B_t - B_s + a_s  (s's own input is NOT decayed)
+        # per-position stabilizer m_t = max(m_prev + B_t, B_t + max_{s<=t}(a_s - B_s))
+        run_max = jax.lax.cummax(a - Bcum, axis=1)
+        m_t = jnp.maximum(m_prev[:, None] + Bcum, run_max + Bcum)
+        # intra-chunk weights: exp(B_t - B_s + a_s - m_t)  (s <= t)
+        logw = (Bcum[:, :, None, :] - Bcum[:, None, :, :]
+                + a[:, None, :, :] - m_t[:, :, None, :])
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(logw), 0.0)              # (B,L,L,nh)
+        scores = jnp.einsum("blhd,bshd->blsh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * scale
+        inter = jnp.exp(m_prev[:, None] + Bcum - m_t)        # (B,L,nh)
+        num = (jnp.einsum("blsh,bshd->blhd", w * scores, vc.astype(jnp.float32))
+               + jnp.einsum("blhd,bhde->blhe", qc.astype(jnp.float32) * scale
+                            * inter[..., None], C))
+        den = ((w * scores).sum(2)
+               + jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32) * scale, n) * inter)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- end-of-chunk state
+        BL = Bcum[:, -1, :]                                   # (B,nh)
+        m_new = jnp.maximum(m_prev + BL, run_max[:, -1] + BL)
+        tailw = jnp.exp(BL[:, None] - Bcum + a - m_new[:, None])  # exp(B_L - B_s + a_s - m_new)
+        C_new = (C * jnp.exp(m_prev + BL - m_new)[:, :, None, None]
+                 + jnp.einsum("bshd,bshe->bhde", kc.astype(jnp.float32) * tailw[..., None],
+                              vc.astype(jnp.float32)))
+        n_new = (n * jnp.exp(m_prev + BL - m_new)[:, :, None]
+                 + (kc.astype(jnp.float32) * tailw[..., None]).sum(1))
+        return (C_new, n_new, m_new), h
+
+    from .. import runtime_flags
+    # checkpointed chunk body (see mamba2): bwd recomputes intra-chunk mats
+    (C, n, m), hs = jax.lax.scan(jax.checkpoint(body), (C0, n0, m0),
+                                 (qs, ks, vs, igs, fgs),
+                                 unroll=runtime_flags.probe_unroll())
+    h = hs.swapaxes(0, 1).reshape(B, nchunk * L, nh, dk)[:, :S]
+    return h, (C, n, m)
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    W = conv_w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+           if conv_state is None else conv_state)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(W))
+    out = jax.nn.silu(out + conv_b)
+    return out, (xp[:, -(W - 1):] if W > 1 else pad)
+
+
+def mlstm_block(cfg: ArchConfig, p: Dict, x: Array, *, mesh=None,
+                state: Optional[Dict] = None) -> Tuple[Array, Optional[Dict]]:
+    xc, di, nh, dk = _mdims(cfg)
+    B, S, d = x.shape
+    up = x @ p["w_up"]
+    inner, z = up[..., :di], up[..., di:]
+    conv_state = state["conv"] if state is not None else None
+    cx, new_conv = _causal_conv(inner, p["conv_w"], p["conv_b"], conv_state)
+    q = (cx @ p["wq"]).reshape(B, S, nh, dk)
+    k = (cx @ p["wk"]).reshape(B, S, nh, dk)
+    v = (inner @ p["wv"]).reshape(B, S, nh, dk)
+    gates = cx @ p["w_if"] + p["b_if"]
+    ig, fg = gates[..., :nh], gates[..., nh:]
+    mstate = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32),
+              state["m"].astype(jnp.float32)) if state is not None else None
+    h, (C, n, m) = _chunked_mlstm(q, k, v, ig, fg, xc.chunk, mstate)
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = rms_norm(h, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    h = shard_hint(h, mesh, DP, None, "model")
+    out = h @ p["w_down"]
+    new_state = None
+    if state is not None:
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_template(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dff = int(d * 4 / 3)
+    return {
+        "w_x": leaf((d, 4 * d), (None, "model")),           # i,f,z,o input proj
+        "r_h": leaf((nh, hd, 4 * hd), (None, None, "model"), scale=0.05),  # block-diag recurrent
+        "b": leaf((4 * d,), ("model",), init="zeros"),
+        "norm_w": leaf((d,), (None,), init="ones"),
+        "w_up1": leaf((d, dff), (None, "model")),
+        "w_up2": leaf((d, dff), (None, "model")),
+        "w_down": leaf((dff, d), ("model", None)),
+    }
+
+
+def slstm_state_template(cfg: ArchConfig, batch: int) -> Dict:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    sp = (DP, "model", None)
+    return {"c": leaf((batch, nh, hd), sp, init="zeros"),
+            "n": leaf((batch, nh, hd), sp, init="zeros"),
+            "h": leaf((batch, nh, hd), sp, init="zeros"),
+            "m": leaf((batch, nh, hd), sp, init="zeros")}
+
+
+def _slstm_cell(p, nh, hd, carry, xw):
+    """One step. carry: (c, n, h, m) each (B, nh, hd); xw: (B, 4d) pre-proj."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r_h"].astype(jnp.float32))  # (B,nh,4hd)
+    g = xw.reshape(xw.shape[0], nh, 4 * hd).astype(jnp.float32) + rec
+    i_t, f_t, z_t, o_t = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(cfg: ArchConfig, p: Dict, x: Array, *, mesh=None,
+                state: Optional[Dict] = None) -> Tuple[Array, Optional[Dict]]:
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xw = x @ p["w_x"] + p["b"]
+    if state is None:
+        z = jnp.zeros((B, nh, hd), jnp.float32)
+        carry0 = (z, z, z, z)
+    else:
+        carry0 = (state["c"].astype(jnp.float32), state["n"].astype(jnp.float32),
+                  state["h"].astype(jnp.float32), state["m"].astype(jnp.float32))
+
+    def step(carry, xw_t):
+        new = _slstm_cell(p, nh, hd, carry, xw_t)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, p["norm_w"], cfg.norm_eps)
+    # post-up-projection GeGLU (paper's sLSTM block, factor 4/3)
+    y = (jax.nn.gelu((h @ p["w_up1"]).astype(jnp.float32))
+         * (h @ p["w_up2"]).astype(jnp.float32)).astype(x.dtype)
+    y = shard_hint(y, mesh, DP, None, "model")
+    out = y @ p["w_down"]
+    new_state = None
+    if state is not None:
+        c, n, hh, m = carry
+        new_state = {"c": c, "n": n, "h": hh, "m": m}
+    return out, new_state

@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update, adamw_state_template  # noqa: F401
+from .schedule import wsd_schedule  # noqa: F401

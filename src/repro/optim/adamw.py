@@ -1,0 +1,155 @@
+"""AdamW with global-norm clipping and optional compressed moments.
+
+``state_bits=8`` stores the first moment as int8 with a per-row fp32 scale
+(m is zero-mean; linear quantization is benign) and the second moment as
+bfloat16 (v spans many orders of magnitude; bf16's exponent keeps the
+relative error ~0.4% where a linear int8 grid would flush small entries to
+zero and blow up 1/sqrt(v)).  10 B/param -> 3.1 B/param of optimizer state —
+this is what makes deepseek-v3-671b training fit a 256-chip pod (DESIGN.md
+§6 / EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ParamLeaf, is_leaf, leaf
+
+Array = Any
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+    m_scale: Any  # None (fp32 mode) or per-row scales pytree
+    v_scale: Any
+
+
+def _q8(x):
+    """int8 quantize along the last axis; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    return jnp.round(x / scale).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def adamw_state_template(param_tree, state_bits: int = 32):
+    """Template tree (ParamLeaf) for m/v (+ scales) mirroring param specs.
+
+    With ``runtime_flags.OPT["zero1_opt_state"]``, each moment additionally
+    shards its largest unsharded dim over the data axes (ZeRO-1): GSPMD then
+    turns the gradient all-reduce into reduce-scatter + a param all-gather,
+    and the resident optimizer state shrinks by the data-axis size.
+    """
+    from .. import runtime_flags
+    from ..models.common import DP
+    zero1 = runtime_flags.OPT["zero1_opt_state"]
+
+    def _zero1_spec(l: ParamLeaf):
+        if not zero1 or any(s == DP for s in l.spec):
+            return l.spec  # already data-sharded (FSDP params)
+        cand = [i for i, s in enumerate(l.spec) if s is None and l.shape[i] > 1]
+        if not cand:
+            return l.spec
+        i = max(cand, key=lambda j: l.shape[j])
+        return l.spec[:i] + (DP,) + l.spec[i + 1:]
+
+    def moment(dt):
+        def f(l: ParamLeaf):
+            return ParamLeaf(l.shape, _zero1_spec(l), "zeros", None, dt)
+        return f
+
+    def scale(l: ParamLeaf):
+        return ParamLeaf(l.shape[:-1] + (1,), l.spec[:-1] + (None,), "zeros", None, "float32")
+
+    m = jax.tree.map(moment("int8" if state_bits == 8 else "float32"),
+                     param_tree, is_leaf=is_leaf)
+    v = jax.tree.map(moment("bfloat16" if state_bits == 8 else "float32"),
+                     param_tree, is_leaf=is_leaf)
+    if state_bits == 8:
+        ms = jax.tree.map(scale, param_tree, is_leaf=is_leaf)
+        vs = None
+    else:
+        ms = vs = None
+    return {"step": ParamLeaf((), (), "zeros", None, "int32"),
+            "m": m, "v": v, "m_scale": ms, "v_scale": vs}
+
+
+def adamw_init(params, state_bits: int = 32) -> AdamWState:
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.int8 if state_bits == 8
+                                         else jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16 if state_bits == 8
+                                         else jnp.float32), params)
+    if state_bits == 8:
+        ms = jax.tree.map(lambda p: jnp.zeros(p.shape[:-1] + (1,), jnp.float32), params)
+    else:
+        ms = None
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v, m_scale=ms, v_scale=None)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update_impl(params, state: AdamWState, grads, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0,
+                 state_bits: int = 32, update_shardings=None):
+    """``update_shardings`` (pytree of NamedSharding matching params): pin
+    the fp32 update math to the ZeRO-1 layout — GSPMD then reduce-scatters
+    the grads into the sharded moments and all-gathers only the final bf16
+    params, instead of materializing fp32 intermediates at the replicated
+    param layout."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, msc, vsc, sh):
+        pin = (lambda x: jax.lax.with_sharding_constraint(x, sh)) if sh is not None \
+            else (lambda x: x)
+        g = pin(g.astype(jnp.float32) * scale)
+        m_f = _dq8(m, msc) if state_bits == 8 else m
+        v_f = v.astype(jnp.float32) if state_bits == 8 else v
+        m_f = pin(b1 * m_f + (1 - b1) * g)
+        v_f = pin(b2 * v_f + (1 - b2) * g * g)
+        upd_ = pin((m_f / bc1) / (jnp.sqrt(v_f / bc2) + eps)
+                   + weight_decay * pin(p.astype(jnp.float32)))
+        p2 = (pin(p.astype(jnp.float32) - lr * upd_)).astype(p.dtype)
+        if state_bits == 8:
+            mq, ms2 = _q8(m_f)
+            return p2, mq, v_f.astype(jnp.bfloat16), ms2, None
+        return p2, m_f, v_f, None, None
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_ms = tdef.flatten_up_to(state.m_scale) if state_bits == 8 else [None] * len(flat_p)
+    flat_vs = [None] * len(flat_p)
+    flat_sh = (tdef.flatten_up_to(update_shardings) if update_shardings is not None
+               else [None] * len(flat_p))
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v, flat_ms,
+                                      flat_vs, flat_sh)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_ms = tdef.unflatten([o[3] for o in out]) if state_bits == 8 else None
+    return new_p, AdamWState(step=step, m=new_m, v=new_v, m_scale=new_ms, v_scale=None), gnorm
+
+
+#: jitted entry point (no sharding pins) — train steps that pin the update
+#: layout call :func:`adamw_update_impl` inside their own jit.
+adamw_update = functools.partial(jax.jit, static_argnames=(
+    "b1", "b2", "eps", "weight_decay", "clip_norm", "state_bits"),
+    donate_argnums=(0, 1))(adamw_update_impl)

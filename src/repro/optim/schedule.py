@@ -1,0 +1,15 @@
+"""Warmup-stable-decay LR schedule (production default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr: float = 3e-4, warmup: int = 200,
+                 total: int = 10_000, decay_frac: float = 0.2,
+                 min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    decay_start = total * (1 - decay_frac)
+    frac = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    decay = peak_lr * (1 - (1 - min_ratio) * frac)
+    return jnp.where(step < decay_start, warm, jnp.minimum(warm, decay))

@@ -1,0 +1,92 @@
+"""§Perf optimization flags: numerical equivalence of the optimized paths.
+
+Each `runtime_flags.OPT` toggle must be a pure layout/communication change —
+the model function's values may not move (fp8 dispatch excepted: it is a
+precision trade and is checked for boundedness).  Multi-device semantics
+(psum_scatter, all_to_all, DPM constraints) need >1 device, so these run in
+an 8-fake-device subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import runtime_flags
+    from repro.configs import get_config, reduced
+    from repro.models import lm
+    from repro.models.common import materialize
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    out = {}
+
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    params = materialize(jax.random.PRNGKey(0), lm.model_template(cfg),
+                         dtype_override="float32")
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)}
+    base = lm.forward(cfg, params, batch, mesh=mesh)[0]
+    runtime_flags.OPT["moe_rs_combine"] = True
+    rs = lm.forward(cfg, params, batch, mesh=mesh)[0]
+    runtime_flags.OPT["moe_fp8_dispatch"] = True
+    f8 = lm.forward(cfg, params, batch, mesh=mesh)[0]
+    runtime_flags.OPT["moe_rs_combine"] = False
+    runtime_flags.OPT["moe_fp8_dispatch"] = False
+    out["rs_err"] = float(jnp.max(jnp.abs(base - rs)))
+    out["f8_err"] = float(jnp.max(jnp.abs(base - f8)))
+    out["f8_finite"] = bool(jnp.isfinite(f8).all())
+
+    cfg2 = reduced(get_config("smollm-135m"))
+    p2 = materialize(jax.random.PRNGKey(0), lm.model_template(cfg2),
+                     dtype_override="float32")
+    b2 = {"tokens": jnp.asarray(rng.integers(0, cfg2.vocab, (8, 16)), jnp.int32)}
+    o1 = lm.forward(cfg2, p2, b2, mesh=mesh)
+    runtime_flags.OPT["attn_batch_shard"] = True
+    o2 = lm.forward(cfg2, p2, b2, mesh=mesh)
+    runtime_flags.OPT["attn_batch_shard"] = False
+    out["attn_err"] = float(jnp.max(jnp.abs(o1 - o2)))
+
+    # zero1 + fsdp + microbatching: the train step must produce the same
+    # params as the plain step (modulo accumulation-order float noise)
+    from repro.launch.steps import make_train_step
+    from repro.optim.adamw import adamw_init
+    p3a = materialize(jax.random.PRNGKey(1), lm.model_template(cfg2),
+                      dtype_override="float32")
+    p3b = jax.tree.map(jnp.copy, p3a)
+    b3 = {"tokens": jnp.asarray(rng.integers(0, cfg2.vocab, (8, 16)), jnp.int32)}
+    sa = make_train_step(cfg2, mesh)
+    pa, _, ma = sa(p3a, adamw_init(p3a), b3)
+    runtime_flags.OPT["zero1_opt_state"] = True
+    runtime_flags.OPT["fsdp_params"] = True
+    sb = make_train_step(cfg2, mesh, microbatches=2)
+    pb, _, mb = sb(p3b, adamw_init(p3b), b3)
+    runtime_flags.OPT["zero1_opt_state"] = False
+    runtime_flags.OPT["fsdp_params"] = False
+    out["train_param_err"] = max(float(jnp.max(jnp.abs(x - y)))
+                                 for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)))
+    out["loss_a"] = float(ma["loss"]); out["loss_b"] = float(mb["loss"])
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_opt_flags_equivalence():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["rs_err"] < 1e-5, out
+    assert out["attn_err"] < 1e-5, out
+    assert out["f8_finite"] and out["f8_err"] < 0.2, out  # fp8: bounded, not exact
+    assert abs(out["loss_a"] - out["loss_b"]) < 2e-3, out
+    assert out["train_param_err"] < 5e-3, out

@@ -1,0 +1,90 @@
+"""Property-based tests (hypothesis): tiling/reordering/stream invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reorder, tiling
+from repro.core.streams import HWConfig, build_task_graph
+from repro.core import compiler, isa
+from repro.gnn import graphs, models
+
+
+graph_st = st.builds(
+    lambda v, e, seed, model: graphs.random_graph(v, e, seed=seed, model=model),
+    v=st.integers(5, 200), e=st.integers(1, 800), seed=st.integers(0, 10),
+    model=st.sampled_from(["powerlaw", "uniform"]),
+)
+
+
+@given(g=graph_st, p=st.integers(1, 8), s=st.integers(1, 8),
+       sparse=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_tiles_cover_every_edge_exactly_once(g, p, s, sparse):
+    ts = tiling.grid_tile(g, p, s, sparse=sparse)
+    seen = []
+    for t in range(ts.n_tiles):
+        ne = int(ts.n_edge[t])
+        seen.extend(ts.edge_gid[t, :ne].tolist())
+    assert sorted(seen) == list(range(g.n_edges))
+
+
+@given(g=graph_st, p=st.integers(1, 6), s=st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_tile_edges_map_to_correct_vertices(g, p, s):
+    ts = tiling.grid_tile(g, p, s, sparse=True)
+    for t in range(ts.n_tiles):
+        ne = int(ts.n_edge[t])
+        pid = int(ts.part_id[t])
+        src_g = ts.src_ids[t, ts.edge_src[t, :ne]]
+        dst_g = ts.part_start[pid] + ts.edge_dst[t, :ne]
+        gid = ts.edge_gid[t, :ne]
+        assert (g.src[gid] == src_g).all()
+        assert (g.dst[gid] == dst_g).all()
+        # destination offsets stay inside the partition
+        assert (ts.edge_dst[t, :ne] < ts.part_size[pid]).all()
+
+
+@given(g=graph_st, p=st.integers(1, 6), s=st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_sparse_tiling_never_loads_more(g, p, s):
+    """Sparse tiles load a subset of the regular tiles' source rows."""
+    reg = tiling.grid_tile(g, p, s, sparse=False)
+    spr = tiling.grid_tile(g, p, s, sparse=True)
+    assert spr.src_vertex_loads() <= reg.src_vertex_loads()
+    # sparse tiles keep exactly the sources with >= 1 edge
+    for t in range(spr.n_tiles):
+        ns, ne = int(spr.n_src[t]), int(spr.n_edge[t])
+        used = set(spr.edge_src[t, :ne].tolist())
+        assert used == set(range(ns))
+
+
+@given(g=graph_st)
+@settings(max_examples=25, deadline=None)
+def test_degree_sort_is_permutation(g):
+    r = reorder.degree_sort(g)
+    assert sorted(r.order.tolist()) == list(range(g.n_vertices))
+    assert (r.order[r.rank] == np.arange(g.n_vertices)).all()
+    # graph is isomorphic: edge multiset preserved under the mapping
+    orig = sorted(zip(g.src.tolist(), g.dst.tolist()))
+    back = sorted(zip(r.order[r.graph.src].tolist(), r.order[r.graph.dst].tolist()))
+    assert orig == back
+    # in-degrees are non-increasing in the new order
+    deg = r.graph.in_degrees()
+    assert (np.diff(deg) <= 0).all() or g.n_vertices <= 1
+
+
+@given(g=graph_st, ns=st.integers(1, 6), ne=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_stream_task_graph_is_acyclic_and_respects_barriers(g, ns, ne):
+    ts = tiling.grid_tile(g, 3, 3)
+    c = compiler.compile_gnn(models.trace_named("gcn"))
+    sde = isa.emit_sde(c.plan)
+    hw = HWConfig(n_sstreams=ns, n_estreams=ne)
+    tasks, _ = build_task_graph(sde, ts, hw)
+    # acyclic: deps only reference earlier task ids (construction order)
+    for t in tasks:
+        assert all(d < t.tid for d in t.deps)
+    # every e-task depends on its s-task; d-barriers collect all partition tiles
+    kinds = {t.tid: t.kind for t in tasks}
+    for t in tasks:
+        if t.kind == "e":
+            assert any(kinds[d] == "s" for d in t.deps)
