@@ -1,12 +1,19 @@
 """Paper Fig 11 analogue: sparse tiling + reordering vs regular tiling —
 off-chip memory-access reduction and simulated speedup, per model, on the
-cit-Patents-like graph (the paper's Fig 11 dataset)."""
+cit-Patents-like graph (the paper's Fig 11 dataset).
+
+Extended with the bucketed-batching study: size-bucketed tile batches
+(``tiling.bucket_tiles``) vs one global pad — padding efficiency (real vs
+padded edge slots), padded-cost simulated cycles, and wall-clock of the
+pipelined executor (scan and Pallas-kernel inner bodies).
+"""
 from __future__ import annotations
 
-from repro.core import compiler, isa, reorder, simulator, tiling
+from repro.core import compiler, isa, pipeline, reorder, simulator, tiling
 from repro.gnn import graphs, models
+from repro.kernels.tile_spmm import ops as tops
 
-from .common import fmt_table, write_report
+from .common import fmt_table, timeit, write_report
 
 
 def run(quick: bool = False):
@@ -37,7 +44,63 @@ def run(quick: bool = False):
     print("== Fig 11: tiling ablation (cit-Patents-like) ==")
     print(fmt_table(rows, headers))
     write_report("bench_tiling", {"headers": headers, "rows": rows})
-    return rows
+
+    pad_rows = bucketing_study(g, quick=quick)
+    return rows + pad_rows
+
+
+def bucketing_study(g, quick: bool = False):
+    """Global pad vs size-bucketed batches on the power-law graph."""
+    ts = tiling.grid_tile(g, 8, 8, sparse=True)
+    sde = isa.emit_sde(compiler.compile_gnn(models.trace_named("gcn")).plan)
+    E = g.n_edges
+
+    variants = {"global-pad": ts}
+    for nb in (2, 4):
+        variants[f"bucketed-{nb}"] = tiling.bucket_tiles(ts, nb)
+
+    base_waste = ts.padded_edge_slots() - E
+    base_cyc = None
+    rows = []
+    for label, t in variants.items():
+        slots = t.padded_edge_slots()
+        waste = slots - E
+        cyc = simulator.simulate_model(sde, t, padded=True).cycles
+        if base_cyc is None:  # first variant is the global-pad baseline
+            base_cyc = cyc
+        rows.append([label, E, slots, f"{t.padding_efficiency():.3f}",
+                     f"{base_waste/max(waste,1):.1f}x", f"{base_cyc/cyc:.2f}x"])
+    headers = ["variant", "real_edges", "padded_edge_slots", "pad_efficiency",
+               "waste_reduction", "padded_cycle_speedup"]
+    print("\n== bucketed tile batching: padding efficiency (cit-Patents-like) ==")
+    print(fmt_table(rows, headers))
+    write_report("bench_tiling_bucketing", {"headers": headers, "rows": rows})
+
+    # wall-clock of the pipelined executor (scan + kernel inner bodies)
+    tr = models.trace_named("gcn", 32, 32)
+    c = compiler.compile_gnn(tr)
+    params = models.init_params(tr)
+    inputs = models.init_inputs(tr, g)
+    bt = tiling.bucket_tiles(ts, 4)
+    # NB: tops.spmm defaults to interpret=True (this container is CPU-only),
+    # so the kernel row measures the Pallas *emulator*, not the MXU; on TPU
+    # pass functools.partial(tops.spmm, interpret=False) as tile_kernel.
+    runners = {
+        "global-pad scan": pipeline.PipelinedRunner(c, g, ts),
+        "bucketed scan": pipeline.PipelinedRunner(c, g, bt),
+        "bucketed + pallas spmm (interpret)": pipeline.PipelinedRunner(
+            c, g, bt, tile_kernel=tops.spmm),
+    }
+    wall_rows = []
+    repeats = 1 if quick else 3
+    for label, r in runners.items():
+        t_s = timeit(lambda r=r: r(inputs, params), repeats=repeats)
+        wall_rows.append([label, f"{t_s*1e3:.1f}ms"])
+    print("\n== pipelined executor wall-clock (gcn, cit-Patents-like) ==")
+    print(fmt_table(wall_rows, ["executor", "median_wall"]))
+    write_report("bench_tiling_wallclock",
+                 {"headers": ["executor", "median_wall"], "rows": wall_rows})
+    return rows + wall_rows
 
 
 if __name__ == "__main__":

@@ -8,14 +8,26 @@ and (b) the fused Pallas tile kernel (``kernels/tile_spmm``), whose grid
 pipelining double-buffers the HBM→VMEM DMA against the MXU.
 
 This module is the scan-based engine: one jit-compiled function per
-(compiled model × tile-set shape).  It is numerically identical to
+(compiled model × tile-set shape).  It is numerically equivalent to
 ``executor.run_tiled`` (the python-loop reference) and is what the GNN
-benchmarks execute.
+benchmarks execute.  Two execution strategies compose:
+
+* **bucketed batching** — pass a :class:`~repro.core.tiling.BucketedTileSet`
+  and each phase runs one ``lax.scan`` per size bucket, threading the same
+  gather accumulators through all buckets.  Each bucket is padded only to
+  its own (S_max, E_max), so skewed graphs stop paying the global-pad tax.
+* **Pallas inner body** — pass ``tile_kernel`` (e.g.
+  ``repro.kernels.tile_spmm.ops.spmm``) and any phase whose gathers are pure
+  SpMM (every ``sendDstSum`` fed directly by a ``recvSrc``) skips the scan:
+  the per-bucket densified adjacency blocks are fed to the tile kernel and
+  its per-partition outputs are added into the shared accumulators.  Phases
+  with edge compute (GAT softmax, R-GCN BMM, max/mean gathers) fall back to
+  the scan body.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,13 +36,13 @@ import numpy as np
 from . import compiler as C
 from . import ir as IR
 from .executor import apply_compute, _NEG_INF
-from .tiling import TileSet
+from .tiling import BucketedTileSet, TileSet
 from ..gnn.graphs import Graph
 
 Array = Any
 
 
-def _padded_partition_ids(tiles: TileSet) -> Tuple[np.ndarray, int]:
+def _padded_partition_ids(tiles) -> Tuple[np.ndarray, int]:
     """(P, Dmax) global vertex ids per partition row; invalid slots -> V."""
     P = tiles.n_dst_parts
     dmax = int(tiles.part_size.max())
@@ -43,15 +55,23 @@ def _padded_partition_ids(tiles: TileSet) -> Tuple[np.ndarray, int]:
 
 
 class PipelinedRunner:
-    """Builds and jits the scan-pipelined executor for one compiled model."""
+    """Builds and jits the scan-pipelined executor for one compiled model.
 
-    def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
-                 tile_kernel: Callable | None = None):
+    ``tiles`` may be a :class:`TileSet` (one global-pad bucket) or a
+    :class:`BucketedTileSet`.  ``tile_kernel`` optionally accelerates
+    pure-SpMM gather phases; it must have the signature
+    ``kernel(adj, xsrc, part_id, flags, *, n_parts) -> (P, Dmax, F)``.
+    """
+
+    def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles,
+                 tile_kernel: Optional[Callable] = None):
         self.c = compiled
         self.prog = compiled.ir
         self.plan = compiled.plan
         self.graph = graph
         self.tiles = tiles
+        self.buckets: List[TileSet] = (
+            list(tiles.buckets) if isinstance(tiles, BucketedTileSet) else [tiles])
         self.tile_kernel = tile_kernel
         self.prog.rebuild_channels()
         self.send_of_comm = {cid: snid for cid, (_, snid, _, _) in self.prog.channels.items()}
@@ -62,23 +82,58 @@ class PipelinedRunner:
                 self.nodes[n.id] = n
                 self.node_seg[n.id] = seg
         self.part_ids_pad, self.dmax = _padded_partition_ids(tiles)
+        self._spmm_levels = self._find_pure_spmm_levels() if tile_kernel else {}
+        self._kernel_const = self._densify_buckets() if self._spmm_levels else None
         self._jitted = jax.jit(self._run)
+
+    # ------------------------------------------------------------- analysis
+    def _find_pure_spmm_levels(self) -> Dict[int, List[IR.IRNode]]:
+        """Levels whose every gather is ``recvSrc -> sendDstSum`` — the pure
+        SpMM aggregation the Pallas tile kernel implements directly."""
+        plan = self.plan
+        by_level: Dict[int, List[IR.IRNode]] = {}
+        for n in self.nodes.values():
+            if n.op.startswith("sendDst"):
+                by_level.setdefault(plan.level[n.id], []).append(n)
+        out: Dict[int, List[IR.IRNode]] = {}
+        for lvl, sends in by_level.items():
+            if all(s.op == "sendDstSum"
+                   and self.nodes[s.inputs[0]].op == "recvSrc"
+                   for s in sends):
+                out[lvl] = sends
+        return out
+
+    def _densify_buckets(self):
+        """One-time numpy preprocessing for the kernel path: per-bucket dense
+        adjacency blocks, FIRST/LAST flags, and partition presence masks."""
+        from ..kernels.tile_spmm.ops import densify_tiles
+        const = []
+        P = self.tiles.n_dst_parts
+        for b in self.buckets:
+            adj, flags = densify_tiles(b)
+            pmask = np.isin(np.arange(P), b.part_id).astype(np.float32)
+            const.append(dict(adj=jnp.asarray(adj), flags=jnp.asarray(flags),
+                              pmask=jnp.asarray(pmask)))
+        return const
 
     # ------------------------------------------------------------------ run
     def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
-        t = self.tiles
-        tile_arrays = dict(
-            src_ids=jnp.asarray(t.src_ids), edge_src=jnp.asarray(t.edge_src),
-            edge_dst=jnp.asarray(t.edge_dst), edge_gid=jnp.asarray(t.edge_gid),
-            n_src=jnp.asarray(t.n_src), n_edge=jnp.asarray(t.n_edge),
-            part_id=jnp.asarray(t.part_id), part_start=jnp.asarray(t.part_start),
-        )
+        tas = []
+        for b in self.buckets:
+            tas.append(dict(
+                src_ids=jnp.asarray(b.src_ids), edge_src=jnp.asarray(b.edge_src),
+                edge_dst=jnp.asarray(b.edge_dst), edge_gid=jnp.asarray(b.edge_gid),
+                n_src=jnp.asarray(b.n_src), n_edge=jnp.asarray(b.n_edge),
+                part_id=jnp.asarray(b.part_id), part_start=jnp.asarray(b.part_start),
+            ))
+        kc = self._kernel_const if self._kernel_const is not None else [
+            {} for _ in self.buckets]
         return self._jitted({k: jnp.asarray(v) for k, v in inputs.items()},
                             {k: jnp.asarray(v) for k, v in params.items()},
-                            tile_arrays)
+                            tuple(tas), tuple(kc))
 
     # ---------------------------------------------------------- trace-time
-    def _run(self, inputs, params, ta) -> List[Array]:
+    def _run(self, inputs, params, tas, kcs) -> List[Array]:
         plan, prog = self.plan, self.prog
         V = self.graph.n_vertices
         P, dmax = self.tiles.n_dst_parts, self.dmax
@@ -129,6 +184,13 @@ class PipelinedRunner:
                 buf = buf.at[pad_ids.reshape(-1)].set(flat)  # invalid rows -> sentinel V
                 vstore[nid] = buf[:V]
 
+        def src_value_of_send(s, rows, senv):
+            """Pre-scatter vertex value feeding gather send ``s`` (via its
+            recvSrc input), evaluated at ``rows``."""
+            r = self.nodes[s.inputs[0]]
+            src_nid = self.nodes[self.send_of_comm[r.comm_id]].inputs[0]
+            return senv[src_nid] if src_nid in senv else vstore[src_nid][rows]
+
         for lvl in range(plan.max_level + 1):
             # ---- destination/partition scope (vectorized over partitions)
             denv = eval_vertex(safe_pad_ids, lvl, roles=("dst",), on_parts=True)
@@ -141,7 +203,7 @@ class PipelinedRunner:
             if not any(plan.level[n.id] == lvl for n in edge_nodes):
                 continue
 
-            # ---- accumulators
+            # ---- accumulators (shared across all buckets of this level)
             acc0: Dict[str, Array] = {}
             for s in gather_sends:
                 if s.op in ("sendDstSum", "sendDstMean"):
@@ -150,60 +212,75 @@ class PipelinedRunner:
                         acc0[f"cnt{s.comm_id}"] = jnp.zeros((P, dmax, 1), jnp.float32)
                 else:
                     acc0[f"max{s.comm_id}"] = jnp.full((P, dmax, s.dim), _NEG_INF, jnp.float32)
+            acc = acc0
 
-            # ---- the pipelined tile loop
-            def body(acc, xs):
-                src_rows = xs["src_ids"]                       # (S,)
-                esrc, edst = xs["edge_src"], xs["edge_dst"]    # (E,)
-                emask = (jnp.arange(esrc.shape[0]) < xs["n_edge"])[:, None]
-                pid = xs["part_id"]
-                dst_global = jnp.minimum(xs["part_start_row"] + edst, V - 1)
+            if lvl in self._spmm_levels and gather_sends:
+                # ---- Pallas inner body: one densified kernel call per bucket
+                for ta, kc in zip(tas, kcs):
+                    senv = eval_vertex(ta["src_ids"], lvl, roles=("src",))
+                    for s in gather_sends:
+                        xsrc = src_value_of_send(s, ta["src_ids"], senv)
+                        out = self.tile_kernel(kc["adj"], xsrc, ta["part_id"],
+                                               kc["flags"], n_parts=P)
+                        # partitions with no tile in this bucket are never
+                        # written by the kernel (uninitialized, may be NaN)
+                        out = jnp.where(kc["pmask"][:, None, None] > 0, out, 0.0)
+                        acc[f"sum{s.comm_id}"] = acc[f"sum{s.comm_id}"] + out
+            else:
+                # ---- the pipelined tile loop, one scan per bucket
+                def body(acc, xs):
+                    src_rows = xs["src_ids"]                       # (S,)
+                    esrc, edst = xs["edge_src"], xs["edge_dst"]    # (E,)
+                    emask = (jnp.arange(esrc.shape[0]) < xs["n_edge"])[:, None]
+                    pid = xs["part_id"]
+                    dst_global = jnp.minimum(xs["part_start_row"] + edst, V - 1)
 
-                senv = eval_vertex(src_rows, lvl, roles=("src",))
-                eenv: Dict[int, Array] = {}
+                    senv = eval_vertex(src_rows, lvl, roles=("src",))
+                    eenv: Dict[int, Array] = {}
 
-                def elookup(nid):
-                    if nid in eenv:
-                        return eenv[nid]
-                    return estore[nid][xs["edge_gid"]]
+                    def elookup(nid):
+                        if nid in eenv:
+                            return eenv[nid]
+                        return estore[nid][xs["edge_gid"]]
 
-                for n in edge_nodes:
-                    if n.op == "recvSrc":
-                        src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
-                        base = senv[src_nid] if src_nid in senv else vstore[src_nid][src_rows]
-                        eenv[n.id] = base[esrc]
-                    elif n.op == "recvDst":
-                        src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
-                        eenv[n.id] = vstore[src_nid][dst_global]
-                    elif n.op == "input":
-                        continue
-                    elif n.is_send():
-                        if plan.level[n.id] != lvl:
+                    for n in edge_nodes:
+                        if n.op == "recvSrc":
+                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
+                            base = senv[src_nid] if src_nid in senv else vstore[src_nid][src_rows]
+                            eenv[n.id] = base[esrc]
+                        elif n.op == "recvDst":
+                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
+                            eenv[n.id] = vstore[src_nid][dst_global]
+                        elif n.op == "input":
                             continue
-                        val = elookup(n.inputs[0])
-                        if n.op in ("sendDstSum", "sendDstMean"):
-                            contrib = jax.ops.segment_sum(
-                                jnp.where(emask, val, 0.0), edst, num_segments=dmax)
-                            acc[f"sum{n.comm_id}"] = acc[f"sum{n.comm_id}"].at[pid].add(contrib)
-                            if n.op == "sendDstMean":
-                                c = jax.ops.segment_sum(
-                                    jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
-                                acc[f"cnt{n.comm_id}"] = acc[f"cnt{n.comm_id}"].at[pid].add(c[:, None])
+                        elif n.is_send():
+                            if plan.level[n.id] != lvl:
+                                continue
+                            val = elookup(n.inputs[0])
+                            if n.op in ("sendDstSum", "sendDstMean"):
+                                contrib = jax.ops.segment_sum(
+                                    jnp.where(emask, val, 0.0), edst, num_segments=dmax)
+                                acc[f"sum{n.comm_id}"] = acc[f"sum{n.comm_id}"].at[pid].add(contrib)
+                                if n.op == "sendDstMean":
+                                    c = jax.ops.segment_sum(
+                                        jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
+                                    acc[f"cnt{n.comm_id}"] = acc[f"cnt{n.comm_id}"].at[pid].add(c[:, None])
+                            else:
+                                m = jax.ops.segment_max(
+                                    jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
+                                m = jnp.maximum(m, _NEG_INF)
+                                acc[f"max{n.comm_id}"] = acc[f"max{n.comm_id}"].at[pid].max(m)
                         else:
-                            m = jax.ops.segment_max(
-                                jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
-                            m = jnp.maximum(m, _NEG_INF)
-                            acc[f"max{n.comm_id}"] = acc[f"max{n.comm_id}"].at[pid].max(m)
-                    else:
-                        eenv[n.id] = apply_compute(n.op, n.attrs, params,
-                                                   [elookup(i) for i in n.inputs])
-                return acc, 0
+                            eenv[n.id] = apply_compute(n.op, n.attrs, params,
+                                                       [elookup(i) for i in n.inputs])
+                    return acc, 0
 
-            xs = dict(src_ids=ta["src_ids"], edge_src=ta["edge_src"],
-                      edge_dst=ta["edge_dst"], edge_gid=ta["edge_gid"],
-                      n_edge=ta["n_edge"], part_id=ta["part_id"],
-                      part_start_row=ta["part_start"][ta["part_id"]])
-            acc, _ = jax.lax.scan(body, acc0, xs)
+                for ta in tas:
+                    xs = dict(src_ids=ta["src_ids"], edge_src=ta["edge_src"],
+                              edge_dst=ta["edge_dst"], edge_gid=ta["edge_gid"],
+                              n_edge=ta["n_edge"], part_id=ta["part_id"],
+                              part_start_row=ta["part_start"][ta["part_id"]])
+                    acc, _ = jax.lax.scan(body, acc, xs)
 
             # ---- publish gather results (padded (P,Dmax) -> (V,))
             for s in gather_sends:
@@ -223,6 +300,7 @@ class PipelinedRunner:
         return [vstore[o.id] for o in outs]
 
 
-def run_pipelined(compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
-                  inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
-    return PipelinedRunner(compiled, graph, tiles)(inputs, params)
+def run_pipelined(compiled: C.CompiledGNN, graph: Graph, tiles,
+                  inputs: Dict[str, Array], params: Dict[str, Array],
+                  tile_kernel: Optional[Callable] = None) -> List[Array]:
+    return PipelinedRunner(compiled, graph, tiles, tile_kernel=tile_kernel)(inputs, params)

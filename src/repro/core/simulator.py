@@ -183,18 +183,23 @@ def simulate(tasks: List[Task], stats: Dict[str, int], hw: HWConfig) -> SimResul
 
 
 def simulate_model(sde: SDEFunctions, tiles: TileSet,
-                   hw: Optional[HWConfig] = None) -> SimResult:
+                   hw: Optional[HWConfig] = None,
+                   padded: bool = False) -> SimResult:
+    """``tiles`` may be a TileSet or BucketedTileSet; ``padded=True`` costs
+    each tile at its batch's padded shape (see ``streams.build_task_graph``),
+    so bucketed batching's reduced padding shows up as fewer cycles."""
     hw = hw or HWConfig()
-    tasks, stats = build_task_graph(sde, tiles, hw)
+    tasks, stats = build_task_graph(sde, tiles, hw, padded=padded)
     return simulate(tasks, stats, hw)
 
 
 def serialized_baseline(sde: SDEFunctions, tiles: TileSet,
-                        hw: Optional[HWConfig] = None) -> SimResult:
+                        hw: Optional[HWConfig] = None,
+                        padded: bool = False) -> SimResult:
     """Non-pipelined tiling baseline (paper Fig 4b): one stream of each kind,
     so tiles are processed strictly one after another."""
     hw = (hw or HWConfig()).scaled(n_sstreams=1, n_estreams=1)
-    tasks, stats = build_task_graph(sde, tiles, hw)
+    tasks, stats = build_task_graph(sde, tiles, hw, padded=padded)
     # serialize: chain every task after the previous one
     for i in range(1, len(tasks)):
         if i - 1 not in tasks[i].deps:

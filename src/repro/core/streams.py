@@ -97,9 +97,17 @@ def instr_cycles(ins: Instr, m: int, hw: HWConfig) -> int:
     return DISPATCH_CYCLES
 
 
-def build_task_graph(sde: SDEFunctions, tiles: TileSet,
-                     hw: HWConfig) -> Tuple[List[Task], Dict[str, int]]:
-    """Lower (SDE functions × tile set) into the stream task DAG."""
+def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
+                     padded: bool = False) -> Tuple[List[Task], Dict[str, int]]:
+    """Lower (SDE functions × tile set) into the stream task DAG.
+
+    ``tiles`` may be a :class:`TileSet` or a
+    :class:`~repro.core.tiling.BucketedTileSet` (the flattened per-tile view
+    is used).  With ``padded=True`` every tile is costed at its batch's
+    padded (S_max, E_max) instead of its true (n_src, n_edge) — the cost the
+    static-shape ``lax.scan`` executor actually pays, which is what makes
+    global padding vs size-bucketed batches comparable in the simulator.
+    """
     tasks: List[Task] = []
     stats = {"offchip_read": 0, "offchip_write": 0, "macs": 0, "elw_ops": 0}
     by = hw.dtype_bytes
@@ -137,6 +145,8 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet,
                 ns, ne = int(tiles.n_src[t]), int(tiles.n_edge[t])
                 if ne == 0 and tiles.sparse:
                     continue
+                if padded:
+                    ns, ne = tiles.padded_dims_of_tile(t)
                 st = Task(tid, "s", _bind(s_t, ns, ne, n_dst), deps=[d_pre.tid],
                           bytes_in=ns * sde.src_load_dim * by,
                           label=f"s[{lvl}].{p}.{t}")

@@ -1,0 +1,34 @@
+"""Version-portable aliases for JAX APIs that moved between releases.
+
+The repo targets the container's pinned jax (0.4.x) but uses names that
+were promoted to the top-level namespace in later releases.  Everything
+here resolves the best available implementation at import time so call
+sites stay on the modern spelling.
+
+* ``tree_flatten_with_path`` — ``jax.tree.flatten_with_path`` (>= 0.5) vs
+  ``jax.tree_util.tree_flatten_with_path`` (all 0.4.x).
+* ``shard_map`` — ``jax.shard_map`` with ``check_vma`` (>= 0.6) vs
+  ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(getattr(jax, "tree", None), "flatten_with_path"):
+    tree_flatten_with_path = jax.tree.flatten_with_path
+else:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` signature, runnable on 0.4.x.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); both toggle
+    the replication/varying-axes check.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -1,31 +1,42 @@
 """Jitted wrappers: TileSet -> block-dense tensors -> Pallas tile kernels.
 
-``densify_tiles`` turns a ZIPPER :class:`TileSet` plus source features into
-the (adj, xsrc) block-dense form the TPU kernels consume; ``spmm`` /
-``gat_aggregate`` are the public entry points (used by the GNN benchmarks
-and by ``core/pipeline.py`` as the accelerated inner body).
+``densify_tiles`` turns a ZIPPER :class:`TileSet` (or each bucket of a
+:class:`BucketedTileSet`) plus source features into the (adj, xsrc)
+block-dense form the TPU kernels consume.  ``spmm`` / ``gat_aggregate`` are
+the public entry points: the GNN benchmarks call them directly, and
+``core/pipeline.py`` passes ``spmm`` as ``tile_kernel`` so pure-SpMM gather
+phases run on the Pallas kernel (one call per size bucket, partition
+outputs summed across buckets) instead of the ``lax.scan`` body.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.tiling import TileSet
+from ...core.tiling import BucketedTileSet, TileSet
 from .kernel import segment_softmax_pallas, tile_flags, tile_spmm_pallas
 from .ref import segment_softmax_ref, tile_spmm_ref
 
 
-def densify_tiles(tiles: TileSet, edge_weight: Optional[np.ndarray] = None):
+def densify_tiles(tiles: Union[TileSet, BucketedTileSet],
+                  edge_weight: Optional[np.ndarray] = None):
     """Build dense per-tile adjacency blocks A (T, Dmax, Smax).
 
     A[t, d, s] = sum of weights of edges (s -> d) in tile t (1.0 default).
     Also returns the FIRST/LAST flags.  numpy, one-time preprocessing —
     the analogue of the paper's offline tiling pass.
+
+    For a :class:`BucketedTileSet` the result is one (adj, flags) pair per
+    bucket — Smax differs per bucket (that is the point of bucketing) while
+    Dmax stays the shared partition maximum, so per-bucket kernel outputs
+    can be summed into one (P, Dmax, F) accumulator.
     """
+    if isinstance(tiles, BucketedTileSet):
+        return [densify_tiles(b, edge_weight) for b in tiles.buckets]
     T, S = tiles.edge_src.shape
     D = int(tiles.part_size.max())
     Smax = tiles.s_max
@@ -38,8 +49,11 @@ def densify_tiles(tiles: TileSet, edge_weight: Optional[np.ndarray] = None):
     return adj, tile_flags(tiles.part_id)
 
 
-def gather_sources(tiles: TileSet, x) -> jnp.ndarray:
-    """(T, Smax, F) compacted source features (sparse tiling's gather)."""
+def gather_sources(tiles: Union[TileSet, BucketedTileSet], x):
+    """(T, Smax, F) compacted source features (sparse tiling's gather);
+    one array per bucket for a :class:`BucketedTileSet`."""
+    if isinstance(tiles, BucketedTileSet):
+        return [gather_sources(b, x) for b in tiles.buckets]
     return jnp.asarray(x)[jnp.asarray(tiles.src_ids)]
 
 

@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import compiler, executor, pipeline, reorder, tiling
 from repro.gnn import graphs, models
+from repro.kernels.tile_spmm import ops as tops
 
 TOL = 5e-4
 
@@ -16,23 +17,43 @@ def _run_all(name, g, strategy):
     params = models.init_params(tr)
     inputs = models.init_inputs(tr, g)
     ref = executor.run_reference(tr, g, inputs, params)
+    tile_kernel = None
     if strategy == "regular":
         ts = tiling.grid_tile(g, 4, 4, sparse=False)
     else:
         ts = tiling.grid_tile(g, 4, 4, sparse=True)
-    out_tiled = executor.run_tiled(c, g, ts, inputs, params)
-    out_pipe = pipeline.run_pipelined(c, g, ts, inputs, params)
-    for a, b in zip(ref, out_tiled):
-        assert float(jnp.max(jnp.abs(a - b))) < TOL, "tiled != oracle"
+    if strategy in ("bucketed", "bucketed+kernel"):
+        ts = tiling.bucket_tiles(ts, 3)
+    if strategy == "bucketed+kernel":
+        tile_kernel = tops.spmm
+    if strategy in ("regular", "sparse"):
+        out_tiled = executor.run_tiled(c, g, ts, inputs, params)
+        for a, b in zip(ref, out_tiled):
+            assert float(jnp.max(jnp.abs(a - b))) < TOL, "tiled != oracle"
+    out_pipe = pipeline.run_pipelined(c, g, ts, inputs, params,
+                                      tile_kernel=tile_kernel)
     for a, b in zip(ref, out_pipe):
         assert float(jnp.max(jnp.abs(a - b))) < TOL, "pipelined != oracle"
 
 
 @pytest.mark.parametrize("name", models.PAPER_MODELS + ("gin",))
-@pytest.mark.parametrize("strategy", ["regular", "sparse"])
+@pytest.mark.parametrize("strategy", ["regular", "sparse", "bucketed",
+                                      "bucketed+kernel"])
 def test_tiled_matches_oracle(name, strategy):
     g = graphs.random_graph(220, 900, seed=1, model="powerlaw", n_edge_types=3)
     _run_all(name, g, strategy)
+
+
+def test_kernel_engages_on_pure_spmm_models():
+    """The Pallas inner body must actually replace the scan for sum-gather
+    phases (the previously-dead ``tile_kernel`` parameter)."""
+    g = graphs.random_graph(150, 600, seed=2, model="powerlaw")
+    bt = tiling.bucket_tiles(tiling.grid_tile(g, 4, 4, sparse=True), 3)
+    for name, engaged in [("gcn", True), ("ggnn", True), ("gin", True),
+                          ("rgcn", False), ("sage", False)]:
+        c = compiler.compile_gnn(models.trace_named(name, 16, 16))
+        r = pipeline.PipelinedRunner(c, g, bt, tile_kernel=tops.spmm)
+        assert bool(r._spmm_levels) == engaged, name
 
 
 @pytest.mark.parametrize("name", ["gcn", "gat"])

@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis): tiling/reordering/stream invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import reorder, tiling
@@ -70,6 +74,36 @@ def test_degree_sort_is_permutation(g):
     # in-degrees are non-increasing in the new order
     deg = r.graph.in_degrees()
     assert (np.diff(deg) <= 0).all() or g.n_vertices <= 1
+
+
+@given(g=graph_st, p=st.integers(1, 6), s=st.integers(1, 6),
+       nb=st.integers(1, 5), sparse=st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_bucketing_preserves_tiles_and_reduces_padding(g, p, s, nb, sparse):
+    ts = tiling.grid_tile(g, p, s, sparse=sparse)
+    bt = tiling.bucket_tiles(ts, nb)
+    # every edge appears exactly once across all buckets
+    seen = []
+    for b in bt.buckets:
+        for t in range(b.n_tiles):
+            seen.extend(b.edge_gid[t, :int(b.n_edge[t])].tolist())
+    assert sorted(seen) == list(range(g.n_edges))
+    # per-bucket tile order is partition-major (Pallas FIRST/LAST protocol)
+    for b in bt.buckets:
+        assert (np.diff(b.part_id) >= 0).all()
+        # edges map to the same global vertices as in the source tile set
+        for t in range(b.n_tiles):
+            ne_ = int(b.n_edge[t])
+            src_g = b.src_ids[t, b.edge_src[t, :ne_]]
+            dst_g = b.part_start[int(b.part_id[t])] + b.edge_dst[t, :ne_]
+            gid = b.edge_gid[t, :ne_]
+            assert (g.src[gid] == src_g).all()
+            assert (g.dst[gid] == dst_g).all()
+    # bucketing never pads more than the global batch
+    assert bt.padded_edge_slots() <= ts.padded_edge_slots()
+    assert bt.padded_src_slots() <= ts.padded_src_slots()
+    assert bt.n_tiles == ts.n_tiles
+    assert bt.src_vertex_loads() == ts.src_vertex_loads()
 
 
 @given(g=graph_st, ns=st.integers(1, 6), ne=st.integers(1, 6))
