@@ -10,6 +10,7 @@ Step 3  plan_sde       : classify vertex ops into source / destination
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -181,16 +182,6 @@ class SDEPlan:
     role: Dict[int, Set[str]]
     max_level: int
 
-    def phase_nodes(self, kind: str, lvl: int) -> List[IR.IRNode]:
-        out = []
-        for seg in self.prog.segments:
-            if seg.kind != kind:
-                continue
-            for n in seg.toposort():
-                if self.level[n.id] == lvl:
-                    out.append(n)
-        return out
-
 
 def plan_sde(prog: IR.IRProgram) -> SDEPlan:
     prog.rebuild_channels()
@@ -218,14 +209,15 @@ def plan_sde(prog: IR.IRProgram) -> SDEPlan:
         for d in deps(n):
             indeg[n.id] += 1
             succ[d].append(n.id)
-    order: List[int] = [nid for nid, d in sorted(indeg.items()) if d == 0]
-    i = 0
-    while i < len(order):
-        for s in sorted(succ[order[i]]):
+    frontier = collections.deque(nid for nid, d in sorted(indeg.items()) if d == 0)
+    order: List[int] = []
+    while frontier:
+        nid = frontier.popleft()
+        order.append(nid)
+        for s in sorted(succ[nid]):
             indeg[s] -= 1
             if indeg[s] == 0:
-                order.append(s)
-        i += 1
+                frontier.append(s)
     if len(order) != len(nodes):
         raise ValueError("global IR graph has a cycle")
 
@@ -277,6 +269,18 @@ class CompiledGNN:
     ir: IR.IRProgram          # optimized
     plan: SDEPlan
     opt_report: Dict[str, int]
+    _schedules: Dict[bool, object] = dataclasses.field(default_factory=dict,
+                                                       repr=False)
+
+    def schedule(self, kernel_dispatch: bool = True):
+        """The :class:`~repro.core.schedule.ScheduledProgram` every engine
+        interprets (cached per dispatch mode)."""
+        from . import schedule as S
+
+        key = bool(kernel_dispatch)
+        if key not in self._schedules:
+            self._schedules[key] = S.lower(self.plan, kernel_dispatch=key)
+        return self._schedules[key]
 
 
 def compile_gnn(tr: TR.GnnTrace, optimize: bool = True) -> CompiledGNN:

@@ -3,26 +3,29 @@
 * :func:`run_reference` — whole-graph oracle (the classic programming model,
   "DGL-functional" semantics): every op over the full vertex/edge tensors.
   This is both the correctness oracle and the paper's non-tiled baseline.
-* :func:`run_tiled` — faithful ZIPPER execution: phased tile-by-tile
-  processing of the compiled SDE plan.  Source ops run per tile on the
-  (sparse-)compacted source block, edge ops run per tile, gathers accumulate
-  into per-partition destination blocks, destination ops run per partition.
-  Gather barriers split the program into phases (needed e.g. for GAT's edge
-  softmax, whose edge-normalization depends on a per-destination reduction).
+* :func:`run_tiled` — faithful ZIPPER execution: an interpreter over the
+  compiled :class:`~repro.core.schedule.ScheduledProgram`.  Source blocks run
+  per tile on the (sparse-)compacted source rows, edge blocks run per tile,
+  gather blocks accumulate into per-partition destination rows, destination
+  blocks run per partition.  Gather blocks tagged with a Pallas kernel
+  (``pallas_spmm`` / ``pallas_spmm_weighted`` / ``pallas_segment_softmax``)
+  dispatch one batched kernel call over the tile set instead of the per-tile
+  scan — the paper's run-time mapping of schedule steps onto hardware blocks.
 
-The jit/scan-pipelined variant lives in ``core/pipeline.py``.
+The engine derives no levels or roles of its own: block membership comes
+entirely from ``schedule.lower`` (single source of truth).  The jit/scan-
+pipelined variant lives in ``core/pipeline.py``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import compiler as C
-from . import ir as IR
-from . import trace as TR
+from . import schedule as S
 from .tiling import TileSet
 from ..gnn.graphs import Graph
 
@@ -82,7 +85,7 @@ def apply_compute(op: str, attrs: Dict, params: Dict[str, Array], args: Sequence
 # whole-graph reference (oracle / non-tiled baseline)
 # ---------------------------------------------------------------------------
 
-def run_reference(tr: TR.GnnTrace, graph: Graph, inputs: Dict[str, Array],
+def run_reference(tr, graph: Graph, inputs: Dict[str, Array],
                   params: Dict[str, Array]) -> List[Array]:
     src = jnp.asarray(graph.src)
     dst = jnp.asarray(graph.dst)
@@ -127,46 +130,31 @@ def run_reference(tr: TR.GnnTrace, graph: Graph, inputs: Dict[str, Array],
 
 
 # ---------------------------------------------------------------------------
-# tiled ZIPPER execution
+# tiled ZIPPER execution: ScheduledProgram interpreter
 # ---------------------------------------------------------------------------
 
 class _TiledRun:
     def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
-                 inputs: Dict[str, Array], params: Dict[str, Array]):
-        self.c = compiled
-        self.prog = compiled.ir
-        self.plan = compiled.plan
+                 inputs: Dict[str, Array], params: Dict[str, Array],
+                 kernel_dispatch: bool = True):
+        self.sp: S.ScheduledProgram = compiled.schedule(kernel_dispatch)
         self.graph = graph
         self.tiles = tiles
         self.params = params
-        self.prog.rebuild_channels()
-        self.send_of_comm = {cid: snid for cid, (_, snid, _, _) in self.prog.channels.items()}
-        self.node_seg: Dict[int, IR.Segment] = {}
-        self.nodes: Dict[int, IR.IRNode] = {}
-        for seg in self.prog.segments:
-            for n in seg.nodes.values():
-                self.nodes[n.id] = n
-                self.node_seg[n.id] = seg
         # global (V, dim) store: inputs, gather results, dst-computed values
-        self.vstore: Dict[int, Array] = {}
+        self.vstore: Dict[int, Array] = {
+            nid: jnp.asarray(inputs[name]) for nid, name in self.sp.vertex_inputs}
         # global (E, dim) store for edge inputs
-        self.estore: Dict[int, Array] = {}
-        for seg in self.prog.segments:
-            for n in seg.nodes.values():
-                if n.op == "input":
-                    val = jnp.asarray(inputs[n.attrs["name"]])
-                    if seg.kind == "vertex":
-                        self.vstore[n.id] = val
-                    else:
-                        self.estore[n.id] = val
+        self.estore: Dict[int, Array] = {
+            nid: jnp.asarray(inputs[name]) for nid, name in self.sp.edge_inputs}
+        self._dense = None      # cached (adj, flags) for pure-SpMM blocks
+        self._flags = None      # FIRST/LAST markers (runtime-densified blocks)
 
-    # -- per-tile source-side evaluation ------------------------------------
-    def _eval_vertex_rows(self, rows: Array, lvl: int, roles: Sequence[str],
-                          store: bool = False, valid: Optional[Array] = None) -> Dict[int, Array]:
-        """Evaluate vertex-segment compute nodes for the given vertex rows.
+    # -- vertex-block evaluation ---------------------------------------------
+    def _eval_vertex(self, nodes, rows: Array, store_ids=()) -> Dict[int, Array]:
+        """Evaluate a Src/Dst block's node list on the given vertex rows.
 
-        roles: which replica(s) to evaluate ('src' per tile / 'dst' per part).
-        store=True writes level==lvl results back into the global vstore
+        ``store_ids`` writes those results back into the global vstore
         (destination replica).  Returns the local env.
         """
         env: Dict[int, Array] = {}
@@ -178,64 +166,160 @@ class _TiledRun:
                 return self.vstore[nid][rows]
             raise KeyError(f"vertex value %{nid} unavailable")
 
-        for seg in self.prog.vertex_segments():
-            for n in seg.toposort():
-                if self.plan.level[n.id] > lvl:
-                    continue
-                if n.op in ("input", "recvInEdge"):
-                    continue  # read lazily via lookup
-                if n.is_send():
-                    continue
-                if not (self.plan.role[n.id] & set(roles)) and n.op != "output":
-                    continue
-                if n.op == "output":
-                    if "dst" not in roles or self.plan.level[n.id] != lvl:
-                        continue
-                    env[n.id] = lookup(n.inputs[0])
-                else:
-                    env[n.id] = apply_compute(n.op, n.attrs, self.params,
-                                              [lookup(i) for i in n.inputs])
-                if store and self.plan.level[n.id] == lvl and (
-                        "dst" in self.plan.role[n.id] or n.op == "output"):
-                    if n.id not in self.vstore:
-                        self.vstore[n.id] = jnp.zeros((self.graph.n_vertices, env[n.id].shape[-1]),
-                                                      env[n.id].dtype)
-                    self.vstore[n.id] = self.vstore[n.id].at[rows].set(env[n.id])
+        for n in nodes:
+            if n.op == "output":
+                env[n.id] = lookup(n.inputs[0])
+            else:
+                env[n.id] = apply_compute(n.op, n.attrs, self.params,
+                                          [lookup(i) for i in n.inputs])
+            if n.id in store_ids:
+                if n.id not in self.vstore:
+                    self.vstore[n.id] = jnp.zeros(
+                        (self.graph.n_vertices, env[n.id].shape[-1]), env[n.id].dtype)
+                self.vstore[n.id] = self.vstore[n.id].at[rows].set(env[n.id])
         return env
+
+    # -- edge-block evaluation (one tile) ------------------------------------
+    def _eval_edge(self, nodes, senv: Dict[int, Array], src_rows: Array,
+                   esrc: Array, edst_global: Array, egid: Array):
+        """Evaluate an edge-block node list for one tile.
+
+        Returns ``(eenv, elookup)``: the local env plus a lookup that falls
+        back to the global edge-feature store for edge inputs.
+        """
+        eenv: Dict[int, Array] = {}
+
+        def elookup(nid: int) -> Array:
+            if nid in eenv:
+                return eenv[nid]
+            if nid in self.estore:
+                return self.estore[nid][egid]
+            raise KeyError(f"edge value %{nid} unavailable")
+
+        for n in nodes:
+            if n.op == "recvSrc":
+                src_nid = self.sp.scatter_value_of[n.id]
+                base = senv[src_nid] if src_nid in senv else self.vstore[src_nid][src_rows]
+                eenv[n.id] = base[esrc]
+            elif n.op == "recvDst":
+                src_nid = self.sp.scatter_value_of[n.id]
+                eenv[n.id] = self.vstore[src_nid][edst_global]
+            else:
+                eenv[n.id] = apply_compute(n.op, n.attrs, self.params,
+                                           [elookup(i) for i in n.inputs])
+        return eenv, elookup
+
+    def _tile_coords(self, ti: int):
+        t = self.tiles
+        p = int(t.part_id[ti])
+        src_rows = jnp.asarray(t.src_ids[ti])            # full padded row
+        esrc = jnp.asarray(t.edge_src[ti])
+        edst_global = jnp.minimum(
+            jnp.asarray(t.edge_dst[ti]) + int(t.part_start[p]),
+            self.graph.n_vertices - 1)
+        egid = jnp.asarray(t.edge_gid[ti])
+        return p, src_rows, esrc, edst_global, egid
+
+    # -- kernel-tagged gather blocks -----------------------------------------
+    def _run_kernel_gathers(self, phase: S.Phase) -> None:
+        from ..kernels.tile_spmm import ops as tops
+        from ..kernels.tile_spmm.kernel import tile_flags
+
+        t = self.tiles
+        P = t.n_dst_parts
+        dmax = int(t.part_size.max())
+        if self._flags is None:
+            self._flags = jnp.asarray(tile_flags(t.part_id))
+        pmask = np.isin(np.arange(P), t.part_id)
+
+        for g in phase.kernel_gathers():
+            # per-tile source values (padded rows; padding never contributes)
+            xsrc_rows = []
+            edge_vals = []
+            for ti in range(t.n_tiles):
+                p, src_rows, esrc, edst_global, egid = self._tile_coords(ti)
+                senv = self._eval_vertex(phase.src.nodes, src_rows)
+                h = (senv[g.src_value_id] if g.src_value_id in senv
+                     else self.vstore[g.src_value_id][src_rows])
+                if g.kernel == S.KERNEL_SPMM:
+                    xsrc_rows.append(h)
+                    continue
+                _, elookup = self._eval_edge(g.edge_nodes, senv, src_rows, esrc,
+                                             edst_global, egid)
+                if g.kernel == S.KERNEL_SPMM_WEIGHTED:
+                    xsrc_rows.append(h)
+                    edge_vals.append(elookup(g.weight_id)[:, 0])   # (E,)
+                else:   # segment softmax: scores + per-edge source values
+                    xsrc_rows.append(h[esrc])                      # (E, F)
+                    edge_vals.append(elookup(g.score_id)[:, 0])    # (E,)
+            xsrc = jnp.stack(xsrc_rows)
+            part_id = jnp.asarray(t.part_id)
+            n_edge = jnp.asarray(t.n_edge)
+
+            if g.kernel == S.KERNEL_SPMM:
+                if self._dense is None:
+                    self._dense = tops.densify_tiles(t)
+                adj, flags = self._dense
+                out = tops.spmm(jnp.asarray(adj), xsrc, part_id,
+                                jnp.asarray(flags), n_parts=P)
+            elif g.kernel == S.KERNEL_SPMM_WEIGHTED:
+                adj = tops.densify_edge_weights(
+                    jnp.stack(edge_vals), jnp.asarray(t.edge_dst),
+                    jnp.asarray(t.edge_src), n_edge, dmax=dmax, smax=t.s_max)
+                out = tops.spmm(adj, xsrc, part_id, self._flags, n_parts=P)
+            else:
+                scores = tops.densify_edge_scores(
+                    jnp.stack(edge_vals), jnp.asarray(t.edge_dst), n_edge,
+                    dmax=dmax)
+                out = tops.gat_aggregate(scores, xsrc, part_id, self._flags,
+                                         n_parts=P)
+            # partitions with no tile are never written by the kernel
+            out = jnp.where(jnp.asarray(pmask)[:, None, None], out, 0.0)
+            buf = jnp.zeros((self.graph.n_vertices, out.shape[-1]), jnp.float32)
+            for p in range(P):
+                lo, n = int(t.part_start[p]), int(t.part_size[p])
+                buf = buf.at[lo:lo + n].set(out[p, :n])
+            self.vstore[g.acc.recv_id] = buf
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> List[Array]:
         t = self.tiles
-        plan = self.plan
         V = self.graph.n_vertices
-        for lvl in range(plan.max_level + 1):
-            # 1. destination/partition-scope ops at this level
-            for p in range(t.n_dst_parts):
-                lo = int(t.part_start[p]); n = int(t.part_size[p])
-                rows = jnp.arange(lo, lo + n)
-                self._eval_vertex_rows(rows, lvl, roles=("dst",), store=True)
-
-            # does this level have tile-scope work?
-            edge_lvl_nodes = [n for seg in self.prog.edge_segments()
-                              for n in seg.toposort() if plan.level[n.id] == lvl]
-            if not edge_lvl_nodes:
+        for phase in self.sp.phases:
+            # 1. destination/partition-scope block
+            if phase.dst.store_ids:
+                for p in range(t.n_dst_parts):
+                    lo = int(t.part_start[p]); n = int(t.part_size[p])
+                    if n == 0:
+                        continue
+                    rows = jnp.arange(lo, lo + n)
+                    self._eval_vertex(phase.dst.nodes, rows,
+                                      store_ids=set(phase.dst.store_ids))
+            if not phase.has_tile_work:
                 continue
 
-            # 2. gather accumulators for this level
+            # 2. kernel-dispatched gather blocks (one batched call each)
+            if phase.kernel_gathers():
+                self._run_kernel_gathers(phase)
+
+            scan_gathers = phase.scan_gathers()
+            if not scan_gathers and not phase.edge.nodes:
+                continue
+
+            # 3. accumulators for the scan-path gathers
             acc_sum: Dict[int, Array] = {}
             acc_max: Dict[int, Array] = {}
             acc_cnt: Dict[int, Array] = {}
-            gather_sends = [n for n in self.nodes.values()
-                            if n.op.startswith("sendDst") and plan.level[n.id] == lvl]
-            for s in gather_sends:
-                if s.op in ("sendDstSum", "sendDstMean"):
-                    acc_sum[s.comm_id] = jnp.zeros((V, s.dim), jnp.float32)
-                    if s.op == "sendDstMean":
-                        acc_cnt[s.comm_id] = jnp.zeros((V, 1), jnp.float32)
+            for g in scan_gathers:
+                cid, dim = g.acc.comm_id, g.acc.dim
+                if g.acc.kind in ("sum", "mean"):
+                    acc_sum[cid] = jnp.zeros((V, dim), jnp.float32)
+                    if g.acc.kind == "mean":
+                        acc_cnt[cid] = jnp.zeros((V, 1), jnp.float32)
                 else:
-                    acc_max[s.comm_id] = jnp.full((V, s.dim), _NEG_INF, jnp.float32)
+                    acc_max[cid] = jnp.full((V, dim), _NEG_INF, jnp.float32)
 
-            # 3. tile loop
+            # 4. tile loop
             for ti in range(t.n_tiles):
                 ns, ne = int(t.n_src[ti]), int(t.n_edge[ti])
                 if ne == 0:
@@ -243,69 +327,44 @@ class _TiledRun:
                 p = int(t.part_id[ti])
                 src_rows = jnp.asarray(t.src_ids[ti, :ns])
                 esrc = jnp.asarray(t.edge_src[ti, :ne])
-                edst_local = jnp.asarray(t.edge_dst[ti, :ne])
-                edst_global = edst_local + int(t.part_start[p])
+                edst_global = jnp.asarray(t.edge_dst[ti, :ne]) + int(t.part_start[p])
                 egid = jnp.asarray(t.edge_gid[ti, :ne])
 
-                senv = self._eval_vertex_rows(src_rows, lvl, roles=("src",))
+                senv = self._eval_vertex(phase.src.nodes, src_rows)
+                _, elookup = self._eval_edge(phase.edge.nodes, senv, src_rows,
+                                             esrc, edst_global, egid)
+                for g in scan_gathers:
+                    cid = g.acc.comm_id
+                    val = elookup(g.acc.value_id)
+                    if g.acc.kind in ("sum", "mean"):
+                        acc_sum[cid] = acc_sum[cid].at[edst_global].add(val)
+                        if g.acc.kind == "mean":
+                            acc_cnt[cid] = acc_cnt[cid].at[edst_global].add(
+                                jnp.ones((val.shape[0], 1), jnp.float32))
+                    else:
+                        acc_max[cid] = acc_max[cid].at[edst_global].max(val)
 
-                eenv: Dict[int, Array] = {}
-
-                def elookup(nid: int) -> Array:
-                    if nid in eenv:
-                        return eenv[nid]
-                    if nid in self.estore:
-                        return self.estore[nid][egid]
-                    raise KeyError(f"edge value %{nid} unavailable")
-
-                for seg in self.prog.edge_segments():
-                    for n in seg.toposort():
-                        # values of lower levels are recomputed every pass over
-                        # the tiles (each phase re-loads and re-scatters);
-                        # gather accumulation only happens at its own level.
-                        if plan.level[n.id] > lvl:
-                            continue
-                        if n.op == "recvSrc":
-                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
-                            if src_nid in senv:
-                                eenv[n.id] = senv[src_nid][esrc]
-                            else:
-                                eenv[n.id] = self.vstore[src_nid][src_rows][esrc]
-                        elif n.op == "recvDst":
-                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
-                            eenv[n.id] = self.vstore[src_nid][edst_global]
-                        elif n.op == "input":
-                            continue  # lazy via elookup
-                        elif n.is_send():
-                            if plan.level[n.id] != lvl:
-                                continue  # gathers accumulate only at their own phase
-                            val = elookup(n.inputs[0])
-                            if n.op in ("sendDstSum", "sendDstMean"):
-                                acc_sum[n.comm_id] = acc_sum[n.comm_id].at[edst_global].add(val)
-                                if n.op == "sendDstMean":
-                                    acc_cnt[n.comm_id] = acc_cnt[n.comm_id].at[edst_global].add(
-                                        jnp.ones((val.shape[0], 1), jnp.float32))
-                            elif n.op.startswith("sendDst"):
-                                acc_max[n.comm_id] = acc_max[n.comm_id].at[edst_global].max(val)
-                        else:
-                            eenv[n.id] = apply_compute(n.op, n.attrs, self.params,
-                                                       [elookup(i) for i in n.inputs])
-
-            # 4. publish gather results for the next level
-            for s in gather_sends:
-                _, _, rsi, rnid = self.prog.channels[s.comm_id]
-                if s.op == "sendDstSum":
-                    self.vstore[rnid] = acc_sum[s.comm_id]
-                elif s.op == "sendDstMean":
-                    self.vstore[rnid] = acc_sum[s.comm_id] / jnp.maximum(acc_cnt[s.comm_id], 1.0)
+            # 5. publish scan-gather results for the next phase
+            for g in scan_gathers:
+                cid = g.acc.comm_id
+                if g.acc.kind == "sum":
+                    self.vstore[g.acc.recv_id] = acc_sum[cid]
+                elif g.acc.kind == "mean":
+                    self.vstore[g.acc.recv_id] = acc_sum[cid] / jnp.maximum(
+                        acc_cnt[cid], 1.0)
                 else:
-                    self.vstore[rnid] = acc_max[s.comm_id]
+                    self.vstore[g.acc.recv_id] = acc_max[cid]
 
-        # outputs, in id order (== declaration order)
-        outs = sorted((n for n in self.nodes.values() if n.op == "output"), key=lambda n: n.id)
-        return [self.vstore[o.id] for o in outs]
+        return [self.vstore[o] for o in self.sp.outputs]
 
 
 def run_tiled(compiled: C.CompiledGNN, graph: Graph, tiles: TileSet,
-              inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
-    return _TiledRun(compiled, graph, tiles, inputs, params).run()
+              inputs: Dict[str, Array], params: Dict[str, Array],
+              kernel_dispatch: bool = True) -> List[Array]:
+    """Interpret the compiled scheduled program tile-by-tile.
+
+    ``kernel_dispatch=False`` forces every gather block onto the scan path
+    (the paper's pure multi-phase schedule, no Pallas blocks).
+    """
+    return _TiledRun(compiled, graph, tiles, inputs, params,
+                     kernel_dispatch=kernel_dispatch).run()

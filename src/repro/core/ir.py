@@ -15,8 +15,8 @@ Entry/exit indicator ops (``input`` / ``output``) mark the program boundary
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import itertools
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -123,10 +123,10 @@ class Segment:
                 if i in self.nodes:
                     indeg[n.id] += 1
                     succs[i].append(n.id)
-        ready = sorted(nid for nid, d in indeg.items() if d == 0)
+        ready = collections.deque(sorted(nid for nid, d in indeg.items() if d == 0))
         order: List[IRNode] = []
         while ready:
-            nid = ready.pop(0)
+            nid = ready.popleft()
             order.append(self.nodes[nid])
             for s in sorted(succs[nid]):
                 indeg[s] -= 1

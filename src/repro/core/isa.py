@@ -1,23 +1,28 @@
 """ZIPPER ISA (paper Table 2) and SDE-function code generation.
 
 Three instruction classes:
-  * computational — ELW (VU), GEMM/BMM (MU), GOP scatter/gather (VU)
+  * computational — ELW (VU), GEMM/BMM (MU), GOP scatter/gather (VU),
+    and the fused kernel-block instructions (SPMM.TILE / SFTM.*) emitted
+    when a gather block is dispatched to a Pallas hardware block
   * data-transfer — LD.SRC / LD.DST / LD.EDGE / ST.DST (memory controller)
   * synchronization — SIGNAL / WAIT / FCH.TILE / FCH.PTT / UPD.PTT / CHK.PTT
 
 Instructions are coarse-grained: one instruction operates on all vertices or
-edges of a tile (paper §6.1 "ISA").  Codegen lowers an :class:`SDEPlan` into
-per-(role, phase) instruction *templates*; row counts (n_src / n_edge /
-partition size) are bound per tile by the scheduler / simulator.
+edges of a tile (paper §6.1 "ISA").  Codegen lowers a
+:class:`~repro.core.schedule.ScheduledProgram` — the SAME block structure the
+JAX engines interpret — into per-(role, phase) instruction *templates*; row
+counts (n_src / n_edge / partition size) are bound per tile by the scheduler
+/ simulator.  A plain :class:`~repro.core.compiler.SDEPlan` is accepted for
+convenience and lowered internally (``kernel_dispatch=False`` by default, the
+paper's pure multi-phase schedule).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Tuple, Union
 
 from . import ir as IR
 from .compiler import SDEPlan
-from . import passes
 
 #: dispatch overhead charged per instruction (decoder + operand setup), cycles
 DISPATCH_CYCLES = 8
@@ -42,14 +47,17 @@ class Instr:
     unit: str            # 'MU' | 'VU' | 'MEM' | 'CTRL'
     rows: str = ""       # symbolic row count: 'n_src' | 'n_edge' | 'n_dst'
     k: int = 0           # inner dim (GEMM/GEMV)
+    krows: str = ""      # symbolic inner dim (kernel blocks: bound per tile)
     n: int = 1           # output feature dim / ELW width
     weight_bytes: int = 0  # weight-buffer traffic (GEMM/BMM)
     fused: int = 1       # number of IR ops folded into this instruction
     tag: str = ""
 
     def bound(self, n_src: int, n_edge: int, n_dst: int) -> Tuple[int, int, int]:
-        m = {"n_src": n_src, "n_edge": n_edge, "n_dst": n_dst, "": 0}[self.rows]
-        return m, self.k, self.n
+        dims = {"n_src": n_src, "n_edge": n_edge, "n_dst": n_dst, "": 0}
+        m = dims[self.rows]
+        k = dims[self.krows] if self.krows else self.k
+        return m, k, self.n
 
 
 def _compute_instr(node: IR.IRNode, rows: str) -> Instr:
@@ -64,6 +72,32 @@ def _compute_instr(node: IR.IRNode, rows: str) -> Instr:
         # matrix-vector runs on the VU (paper Table 2 lists GEMV under ELW)
         return Instr("GEMV", "VU", rows, k=node.attrs["wshape"][0], n=1, tag=node.op)
     return Instr(_ELW_OPCODE[node.op], "VU", rows, n=node.dim, tag=node.op)
+
+
+def _kernel_instrs(g) -> List[Instr]:
+    """Instruction template of one Pallas-dispatched gather block.
+
+    The dense tile kernels run the aggregation as an (n_dst × k) MXU matmul
+    per tile instead of per-edge VU gather indirection — that shape shift is
+    exactly what the simulator should cost.
+    """
+    from . import schedule as S
+
+    if g.kernel == S.KERNEL_SPMM:
+        return [Instr("SPMM.TILE", "MU", "n_dst", krows="n_src", n=g.acc.dim,
+                      tag=g.kernel)]
+    if g.kernel == S.KERNEL_SPMM_WEIGHTED:
+        # runtime densification of α (VU scatter) + the dense tile matmul
+        return [Instr("DENS.W", "VU", "n_edge", n=1, tag="densify"),
+                Instr("SPMM.TILE", "MU", "n_dst", krows="n_src", n=g.acc.dim,
+                      tag=g.kernel)]
+    if g.kernel == S.KERNEL_SEGMENT_SOFTMAX:
+        # one online-softmax pass: per-edge mask/exp/rescale on the VU, then
+        # the (n_dst × n_edge) @ (n_edge × F) probability-value matmul
+        return [Instr("SFTM.EDGE", "VU", "n_edge", n=3, tag="online-softmax"),
+                Instr("SFTM.MM", "MU", "n_dst", krows="n_edge", n=g.acc.dim,
+                      tag=g.kernel)]
+    raise ValueError(f"unknown kernel tag {g.kernel}")
 
 
 @dataclasses.dataclass
@@ -87,13 +121,18 @@ class SDEFunctions:
         return range(self.max_level + 1)
 
 
-def emit_sde(plan: SDEPlan, fuse: bool = True) -> SDEFunctions:
-    prog = plan.prog
-    fusion_nodes: Dict[int, int] = {}  # node id -> fusion group leader id
-    if fuse:
-        for group in passes.fuse_elementwise(prog):
-            for nid in group:
-                fusion_nodes[nid] = group[0]
+def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
+             kernel_dispatch: bool = False) -> SDEFunctions:
+    """Lower a scheduled program into SDE instruction templates.
+
+    Accepts either a :class:`~repro.core.schedule.ScheduledProgram` (costed
+    exactly as the JAX engines execute it, kernel blocks included) or an
+    :class:`SDEPlan` (lowered internally with ``kernel_dispatch``).
+    """
+    from . import schedule as S
+
+    sp = (S.lower(plan, kernel_dispatch=kernel_dispatch)
+          if isinstance(plan, SDEPlan) else plan)
 
     s: Dict[int, List[Instr]] = {}
     e: Dict[int, List[Instr]] = {}
@@ -102,43 +141,29 @@ def emit_sde(plan: SDEPlan, fuse: bool = True) -> SDEFunctions:
     def _push(bucket: Dict[int, List[Instr]], lvl: int, instr: Instr):
         bucket.setdefault(lvl, []).append(instr)
 
-    src_load_dim = dst_load_dim = edge_feat_dim = out_dim = 0
-    for seg in prog.segments:
-        for node in seg.toposort():
-            lvl = plan.level[node.id]
-            if node.op == "input":
-                if seg.kind == "vertex":
-                    roles = plan.role[node.id]
-                    if "src" in roles:
-                        src_load_dim += node.dim
-                    if "dst" in roles:
-                        dst_load_dim += node.dim
-                else:
-                    edge_feat_dim += node.dim
-                continue
-            if node.op == "output":
-                out_dim += node.dim
-                continue
-            if seg.kind == "edge":
-                if node.is_recv():
-                    _push(e, lvl, Instr(_GOP_OPCODE[node.op], "VU", "n_edge", n=node.dim, tag=node.op))
-                elif node.is_send():
-                    _push(e, lvl, Instr(_GOP_OPCODE[node.op], "VU", "n_edge", n=node.dim, tag=node.op))
-                    if node.op == "sendDstMean":
-                        _push(d, lvl + 1, Instr("ELW.DIV", "VU", "n_dst", n=node.dim, tag="mean-div"))
-                else:
-                    _push(e, lvl, _compute_instr(node, "n_edge"))
+    for phase in sp.phases:
+        lvl = phase.level
+        for node in phase.src.fresh:
+            _push(s, lvl, _compute_instr(node, "n_src"))
+        for node in phase.dst.fresh:
+            if node.op != "output":
+                _push(d, lvl, _compute_instr(node, "n_dst"))
+        for node in phase.edge.fresh:
+            if node.is_recv() or node.is_send():
+                _push(e, lvl, Instr(_GOP_OPCODE[node.op], "VU", "n_edge",
+                                    n=node.dim, tag=node.op))
+                if node.op == "sendDstMean":
+                    _push(d, lvl + 1, Instr("ELW.DIV", "VU", "n_dst",
+                                            n=node.dim, tag="mean-div"))
             else:
-                if node.is_send() or node.is_recv():
-                    continue  # vertex-side comm is realized by the edge SCTR/GTHR
-                roles = plan.role[node.id]
-                if "src" in roles:
-                    _push(s, lvl, _compute_instr(node, "n_src"))
-                if "dst" in roles:
-                    _push(d, lvl, _compute_instr(node, "n_dst"))
+                _push(e, lvl, _compute_instr(node, "n_edge"))
+        for g in phase.kernel_gathers():
+            for ins in _kernel_instrs(g):
+                _push(e, lvl, ins)
 
-    # element-wise fusion: collapse adjacent VU ELW instrs that came from one
-    # fusion group into a single instruction (saves dispatch overhead)
+    # element-wise fusion: collapse adjacent VU ELW instrs into a single
+    # instruction (saves dispatch overhead, mirrors the paper's use of
+    # "existing DL optimizations" on the IR)
     if fuse:
         for bucket in (s, e, d):
             for lvl, instrs in bucket.items():
@@ -156,6 +181,7 @@ def emit_sde(plan: SDEPlan, fuse: bool = True) -> SDEFunctions:
                 bucket[lvl] = fused
 
     return SDEFunctions(s=s, e=e, d=d,
-                        src_load_dim=src_load_dim, dst_load_dim=dst_load_dim,
-                        edge_feat_dim=edge_feat_dim, out_dim=out_dim,
-                        max_level=plan.max_level)
+                        src_load_dim=sp.src_load_dim,
+                        dst_load_dim=sp.dst_load_dim,
+                        edge_feat_dim=sp.edge_feat_dim, out_dim=sp.out_dim,
+                        max_level=sp.max_level)

@@ -4,37 +4,38 @@ On the ZIPPER ASIC, tile pipelining comes from multiple hardware streams.
 On TPU/XLA there is one instruction stream per core, but the same effect —
 tile *t+1*'s data movement overlapped with tile *t*'s compute — falls out of
 (a) ``lax.scan`` over the padded tile batch, which XLA software-pipelines,
-and (b) the fused Pallas tile kernel (``kernels/tile_spmm``), whose grid
-pipelining double-buffers the HBM→VMEM DMA against the MXU.
+and (b) the fused Pallas tile kernels (``kernels/tile_spmm`` +
+``kernels/segment_softmax``), whose grid pipelining double-buffers the
+HBM→VMEM DMA against the MXU.
 
 This module is the scan-based engine: one jit-compiled function per
-(compiled model × tile-set shape).  It is numerically equivalent to
-``executor.run_tiled`` (the python-loop reference) and is what the GNN
-benchmarks execute.  Two execution strategies compose:
+(compiled model × tile-set shape).  Like ``executor.run_tiled`` it is an
+*interpreter* of the :class:`~repro.core.schedule.ScheduledProgram` — it
+derives no levels or roles of its own.  Per phase:
 
-* **bucketed batching** — pass a :class:`~repro.core.tiling.BucketedTileSet`
-  and each phase runs one ``lax.scan`` per size bucket, threading the same
-  gather accumulators through all buckets.  Each bucket is padded only to
-  its own (S_max, E_max), so skewed graphs stop paying the global-pad tax.
-* **Pallas inner body** — pass ``tile_kernel`` (e.g.
-  ``repro.kernels.tile_spmm.ops.spmm``) and any phase whose gathers are pure
-  SpMM (every ``sendDstSum`` fed directly by a ``recvSrc``) skips the scan:
-  the per-bucket densified adjacency blocks are fed to the tile kernel and
-  its per-partition outputs are added into the shared accumulators.  Phases
-  with edge compute (GAT softmax, R-GCN BMM, max/mean gathers) fall back to
-  the scan body.
+* the destination block runs vectorized over partitions,
+* gather blocks tagged ``pallas_spmm`` / ``pallas_spmm_weighted`` dispatch
+  one densified kernel call per size bucket (partition outputs summed into
+  the shared accumulators),
+* a gather block tagged ``pallas_segment_softmax`` dispatches the online-
+  softmax kernel over the unbucketed tile batch (softmax state cannot be
+  merged across buckets) — GAT's three softmax phases in ONE kernel pass,
+* ``scan``-tagged gathers run the pipelined ``lax.scan`` tile loop, one scan
+  per bucket with shared accumulators.
+
+``tiles`` may be a :class:`~repro.core.tiling.TileSet` (one global-pad
+bucket) or a :class:`~repro.core.tiling.BucketedTileSet`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import compiler as C
-from . import ir as IR
+from . import schedule as S
 from .executor import apply_compute, _NEG_INF
 from .tiling import BucketedTileSet, TileSet
 from ..gnn.graphs import Graph
@@ -54,253 +55,278 @@ def _padded_partition_ids(tiles) -> Tuple[np.ndarray, int]:
     return ids, dmax
 
 
-class PipelinedRunner:
-    """Builds and jits the scan-pipelined executor for one compiled model.
+def _tile_arrays(ts: TileSet) -> Dict[str, Array]:
+    return dict(
+        src_ids=jnp.asarray(ts.src_ids), edge_src=jnp.asarray(ts.edge_src),
+        edge_dst=jnp.asarray(ts.edge_dst), edge_gid=jnp.asarray(ts.edge_gid),
+        n_src=jnp.asarray(ts.n_src), n_edge=jnp.asarray(ts.n_edge),
+        part_id=jnp.asarray(ts.part_id), part_start=jnp.asarray(ts.part_start),
+    )
 
-    ``tiles`` may be a :class:`TileSet` (one global-pad bucket) or a
-    :class:`BucketedTileSet`.  ``tile_kernel`` optionally accelerates
-    pure-SpMM gather phases; it must have the signature
-    ``kernel(adj, xsrc, part_id, flags, *, n_parts) -> (P, Dmax, F)``.
+
+class PipelinedRunner:
+    """Builds and jits the scan/kernel-pipelined executor for one model.
+
+    ``kernel_dispatch`` selects the scheduled program variant: ``True``
+    routes pattern-matched gather blocks through the Pallas kernels,
+    ``False`` (the default when no ``tile_kernel`` is given) interprets the
+    pure multi-phase scan schedule.  ``tile_kernel`` overrides the SpMM
+    kernel entry point (signature
+    ``kernel(adj, xsrc, part_id, flags, *, n_parts) -> (P, Dmax, F)``).
     """
 
     def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles,
-                 tile_kernel: Optional[Callable] = None):
+                 tile_kernel: Optional[Callable] = None,
+                 kernel_dispatch: Optional[bool] = None):
+        from ..kernels.tile_spmm import ops as tops
+
+        if kernel_dispatch is None:
+            kernel_dispatch = tile_kernel is not None
         self.c = compiled
-        self.prog = compiled.ir
-        self.plan = compiled.plan
+        self.sp: S.ScheduledProgram = compiled.schedule(kernel_dispatch)
         self.graph = graph
         self.tiles = tiles
         self.buckets: List[TileSet] = (
             list(tiles.buckets) if isinstance(tiles, BucketedTileSet) else [tiles])
-        self.tile_kernel = tile_kernel
-        self.prog.rebuild_channels()
-        self.send_of_comm = {cid: snid for cid, (_, snid, _, _) in self.prog.channels.items()}
-        self.nodes: Dict[int, IR.IRNode] = {}
-        self.node_seg: Dict[int, IR.Segment] = {}
-        for seg in self.prog.segments:
-            for n in seg.nodes.values():
-                self.nodes[n.id] = n
-                self.node_seg[n.id] = seg
+        self.tile_kernel = tile_kernel if tile_kernel is not None else tops.spmm
+        self.softmax_kernel = tops.gat_aggregate
         self.part_ids_pad, self.dmax = _padded_partition_ids(tiles)
-        self._spmm_levels = self._find_pure_spmm_levels() if tile_kernel else {}
-        self._kernel_const = self._densify_buckets() if self._spmm_levels else None
+
+        kernels = {g.kernel for ph in self.sp.phases for g in ph.gathers}
+        self._kernel_const = (self._bucket_const(S.KERNEL_SPMM in kernels)
+                              if kernels & set(S.PALLAS_KERNELS) else None)
+        # the online-softmax state cannot be merged across buckets, so the
+        # segment-softmax block always runs over the unbucketed tile batch
+        self._softmax_tiles: Optional[TileSet] = None
+        self._softmax_const = None
+        if S.KERNEL_SEGMENT_SOFTMAX in kernels:
+            self._softmax_tiles = (tiles.source if isinstance(tiles, BucketedTileSet)
+                                   else tiles)
+            self._softmax_const = self._tile_const(self._softmax_tiles)
         self._jitted = jax.jit(self._run)
 
-    # ------------------------------------------------------------- analysis
-    def _find_pure_spmm_levels(self) -> Dict[int, List[IR.IRNode]]:
-        """Levels whose every gather is ``recvSrc -> sendDstSum`` — the pure
-        SpMM aggregation the Pallas tile kernel implements directly."""
-        plan = self.plan
-        by_level: Dict[int, List[IR.IRNode]] = {}
-        for n in self.nodes.values():
-            if n.op.startswith("sendDst"):
-                by_level.setdefault(plan.level[n.id], []).append(n)
-        out: Dict[int, List[IR.IRNode]] = {}
-        for lvl, sends in by_level.items():
-            if all(s.op == "sendDstSum"
-                   and self.nodes[s.inputs[0]].op == "recvSrc"
-                   for s in sends):
-                out[lvl] = sends
-        return out
+    # ------------------------------------------------------------- constants
+    def _tile_const(self, ts: TileSet) -> Dict[str, Array]:
+        """FIRST/LAST flags + partition presence mask for one tile batch."""
+        from ..kernels.tile_spmm.kernel import tile_flags
+        P = self.tiles.n_dst_parts
+        return dict(flags=jnp.asarray(tile_flags(ts.part_id)),
+                    pmask=jnp.asarray(np.isin(np.arange(P), ts.part_id)
+                                      .astype(np.float32)))
 
-    def _densify_buckets(self):
-        """One-time numpy preprocessing for the kernel path: per-bucket dense
-        adjacency blocks, FIRST/LAST flags, and partition presence masks."""
+    def _bucket_const(self, with_adj: bool) -> List[Dict[str, Array]]:
+        """Per-bucket kernel metadata; dense adjacency only for pure SpMM."""
         from ..kernels.tile_spmm.ops import densify_tiles
         const = []
-        P = self.tiles.n_dst_parts
         for b in self.buckets:
-            adj, flags = densify_tiles(b)
-            pmask = np.isin(np.arange(P), b.part_id).astype(np.float32)
-            const.append(dict(adj=jnp.asarray(adj), flags=jnp.asarray(flags),
-                              pmask=jnp.asarray(pmask)))
+            kc = self._tile_const(b)
+            if with_adj:
+                adj, _ = densify_tiles(b)
+                kc["adj"] = jnp.asarray(adj)
+            const.append(kc)
         return const
 
     # ------------------------------------------------------------------ run
     def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
-        tas = []
-        for b in self.buckets:
-            tas.append(dict(
-                src_ids=jnp.asarray(b.src_ids), edge_src=jnp.asarray(b.edge_src),
-                edge_dst=jnp.asarray(b.edge_dst), edge_gid=jnp.asarray(b.edge_gid),
-                n_src=jnp.asarray(b.n_src), n_edge=jnp.asarray(b.n_edge),
-                part_id=jnp.asarray(b.part_id), part_start=jnp.asarray(b.part_start),
-            ))
-        kc = self._kernel_const if self._kernel_const is not None else [
-            {} for _ in self.buckets]
+        tas = tuple(_tile_arrays(b) for b in self.buckets)
+        kcs = (tuple(self._kernel_const) if self._kernel_const is not None
+               else tuple({} for _ in self.buckets))
+        ta0 = (_tile_arrays(self._softmax_tiles)
+               if self._softmax_tiles is not None else None)
+        kc0 = self._softmax_const
         return self._jitted({k: jnp.asarray(v) for k, v in inputs.items()},
                             {k: jnp.asarray(v) for k, v in params.items()},
-                            tuple(tas), tuple(kc))
+                            tas, kcs, ta0, kc0)
 
     # ---------------------------------------------------------- trace-time
-    def _run(self, inputs, params, tas, kcs) -> List[Array]:
-        plan, prog = self.plan, self.prog
+    def _run(self, inputs, params, tas, kcs, ta0, kc0) -> List[Array]:
+        from ..kernels.tile_spmm.ops import (densify_edge_scores,
+                                             densify_edge_weights)
+
+        sp = self.sp
         V = self.graph.n_vertices
         P, dmax = self.tiles.n_dst_parts, self.dmax
         pad_ids = jnp.asarray(self.part_ids_pad)          # (P, Dmax), V = invalid
         pad_valid = (pad_ids < V)[..., None]              # (P, Dmax, 1)
         safe_pad_ids = jnp.minimum(pad_ids, V - 1)
 
-        vstore: Dict[int, Array] = {}
-        estore: Dict[int, Array] = {}
-        for seg in prog.segments:
-            for n in seg.nodes.values():
-                if n.op == "input":
-                    (vstore if seg.kind == "vertex" else estore)[n.id] = inputs[n.attrs["name"]]
+        vstore: Dict[int, Array] = {nid: inputs[name]
+                                    for nid, name in sp.vertex_inputs}
+        estore: Dict[int, Array] = {nid: inputs[name]
+                                    for nid, name in sp.edge_inputs}
 
-        def eval_vertex(rows, lvl, roles, on_parts=False):
-            """rows: indices (per-tile (S,) or padded (P,Dmax)); returns env."""
+        def eval_vertex(rows, nodes):
+            """rows: indices (per-tile (S,) / batched (T,S) / padded (P,Dmax))."""
             env: Dict[int, Array] = {}
 
             def lookup(nid):
-                if nid in env:
-                    return env[nid]
-                return vstore[nid][rows]
+                return env[nid] if nid in env else vstore[nid][rows]
 
-            for seg in prog.vertex_segments():
-                for n in seg.toposort():
-                    if plan.level[n.id] > lvl or n.op in ("input", "recvInEdge") or n.is_send():
-                        continue
-                    if n.op == "output":
-                        if "dst" in roles and plan.level[n.id] <= lvl:
-                            env[n.id] = lookup(n.inputs[0])
-                        continue
-                    if not (plan.role[n.id] & set(roles)):
-                        continue
+            for n in nodes:
+                if n.op == "output":
+                    env[n.id] = lookup(n.inputs[0])
+                else:
                     env[n.id] = apply_compute(n.op, n.attrs, params,
                                               [lookup(i) for i in n.inputs])
             return env
 
-        def scatter_back(env, lvl):
-            """Write dst-replica results (padded (P,Dmax,d)) into (V,d) stores."""
-            for nid, val in env.items():
-                n = self.nodes[nid]
-                if plan.level[nid] != lvl:
-                    continue
-                if not ("dst" in plan.role[nid] or n.op == "output"):
-                    continue
-                flat = jnp.where(pad_valid, val, 0.0).reshape(P * dmax, -1)
-                buf = jnp.zeros((V + 1, flat.shape[-1]), flat.dtype)
-                buf = buf.at[pad_ids.reshape(-1)].set(flat)  # invalid rows -> sentinel V
-                vstore[nid] = buf[:V]
+        def edge_env(nodes, xs, senv):
+            """Edge-block evaluation for one tile slice ``xs``."""
+            eenv: Dict[int, Array] = {}
 
-        def src_value_of_send(s, rows, senv):
-            """Pre-scatter vertex value feeding gather send ``s`` (via its
-            recvSrc input), evaluated at ``rows``."""
-            r = self.nodes[s.inputs[0]]
-            src_nid = self.nodes[self.send_of_comm[r.comm_id]].inputs[0]
-            return senv[src_nid] if src_nid in senv else vstore[src_nid][rows]
+            def elookup(nid):
+                return eenv[nid] if nid in eenv else estore[nid][xs["edge_gid"]]
 
-        for lvl in range(plan.max_level + 1):
-            # ---- destination/partition scope (vectorized over partitions)
-            denv = eval_vertex(safe_pad_ids, lvl, roles=("dst",), on_parts=True)
-            scatter_back(denv, lvl)
+            for n in nodes:
+                if n.op == "recvSrc":
+                    src_nid = sp.scatter_value_of[n.id]
+                    base = (senv[src_nid] if src_nid in senv
+                            else vstore[src_nid][xs["src_ids"]])
+                    eenv[n.id] = base[xs["edge_src"]]
+                elif n.op == "recvDst":
+                    src_nid = sp.scatter_value_of[n.id]
+                    eenv[n.id] = vstore[src_nid][xs["dst_global"]]
+                else:
+                    eenv[n.id] = apply_compute(n.op, n.attrs, params,
+                                               [elookup(i) for i in n.inputs])
+            return eenv, elookup
 
-            edge_nodes = [n for seg in prog.edge_segments() for n in seg.toposort()
-                          if plan.level[n.id] <= lvl]
-            gather_sends = [n for n in self.nodes.values()
-                            if n.op.startswith("sendDst") and plan.level[n.id] == lvl]
-            if not any(plan.level[n.id] == lvl for n in edge_nodes):
+        def with_dst(ta):
+            """Per-tile scan/vmap operands: (T, ...) arrays only, with the
+            global destination rows precomputed from the partition table."""
+            xs = {k: ta[k] for k in ("src_ids", "edge_src", "edge_dst",
+                                     "edge_gid", "n_edge", "part_id")}
+            xs["dst_global"] = jnp.minimum(
+                ta["part_start"][ta["part_id"]][:, None] + ta["edge_dst"], V - 1)
+            return xs
+
+        def src_value(senv, nid, rows):
+            return senv[nid] if nid in senv else vstore[nid][rows]
+
+        def unpad(val):
+            """(P, Dmax, d) partition-padded -> (V, d) vertex store."""
+            flat = jnp.where(pad_valid, val, 0.0).reshape(P * dmax, -1)
+            buf = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
+            buf = buf.at[pad_ids.reshape(-1)].set(flat)  # invalid rows -> sentinel V
+            return buf[:V]
+
+        for phase in sp.phases:
+            # ---- destination block (vectorized over partitions)
+            if phase.dst.store_ids:
+                denv = eval_vertex(safe_pad_ids, phase.dst.nodes)
+                for nid in phase.dst.store_ids:
+                    vstore[nid] = unpad(denv[nid])
+            if not phase.has_tile_work:
                 continue
 
-            # ---- accumulators (shared across all buckets of this level)
-            acc0: Dict[str, Array] = {}
-            for s in gather_sends:
-                if s.op in ("sendDstSum", "sendDstMean"):
-                    acc0[f"sum{s.comm_id}"] = jnp.zeros((P, dmax, s.dim), jnp.float32)
-                    if s.op == "sendDstMean":
-                        acc0[f"cnt{s.comm_id}"] = jnp.zeros((P, dmax, 1), jnp.float32)
+            scan_gathers = phase.scan_gathers()
+
+            # ---- accumulators (shared across all buckets of this phase)
+            acc: Dict[str, Array] = {}
+            for g in scan_gathers:
+                cid, dim = g.acc.comm_id, g.acc.dim
+                if g.acc.kind in ("sum", "mean"):
+                    acc[f"sum{cid}"] = jnp.zeros((P, dmax, dim), jnp.float32)
+                    if g.acc.kind == "mean":
+                        acc[f"cnt{cid}"] = jnp.zeros((P, dmax, 1), jnp.float32)
                 else:
-                    acc0[f"max{s.comm_id}"] = jnp.full((P, dmax, s.dim), _NEG_INF, jnp.float32)
-            acc = acc0
+                    acc[f"max{cid}"] = jnp.full((P, dmax, dim), _NEG_INF, jnp.float32)
 
-            if lvl in self._spmm_levels and gather_sends:
-                # ---- Pallas inner body: one densified kernel call per bucket
+            # ---- kernel-dispatched gather blocks
+            for g in phase.kernel_gathers():
+                if g.kernel == S.KERNEL_SEGMENT_SOFTMAX:
+                    xs0 = with_dst(ta0)
+
+                    def tile_se(xs):
+                        senv = eval_vertex(xs["src_ids"], phase.src.nodes)
+                        _, elookup = edge_env(g.edge_nodes, xs, senv)
+                        h = src_value(senv, g.src_value_id, xs["src_ids"])
+                        return elookup(g.score_id)[:, 0], h[xs["edge_src"]]
+
+                    scores_e, vals = jax.vmap(tile_se)(xs0)    # (T,E), (T,E,F)
+                    scores = densify_edge_scores(
+                        scores_e, ta0["edge_dst"], ta0["n_edge"], dmax=dmax)
+                    out = self.softmax_kernel(scores, vals, ta0["part_id"],
+                                              kc0["flags"], n_parts=P)
+                    out = jnp.where(kc0["pmask"][:, None, None] > 0, out, 0.0)
+                    vstore[g.acc.recv_id] = unpad(out)
+                    continue
+
+                # SpMM variants: one densified kernel call per size bucket,
+                # partition outputs summed into a shared (P, Dmax, F) buffer
+                total = jnp.zeros((P, dmax, g.acc.dim), jnp.float32)
                 for ta, kc in zip(tas, kcs):
-                    senv = eval_vertex(ta["src_ids"], lvl, roles=("src",))
-                    for s in gather_sends:
-                        xsrc = src_value_of_send(s, ta["src_ids"], senv)
-                        out = self.tile_kernel(kc["adj"], xsrc, ta["part_id"],
-                                               kc["flags"], n_parts=P)
-                        # partitions with no tile in this bucket are never
-                        # written by the kernel (uninitialized, may be NaN)
-                        out = jnp.where(kc["pmask"][:, None, None] > 0, out, 0.0)
-                        acc[f"sum{s.comm_id}"] = acc[f"sum{s.comm_id}"] + out
-            else:
-                # ---- the pipelined tile loop, one scan per bucket
+                    senv = eval_vertex(ta["src_ids"], phase.src.nodes)
+                    xsrc = src_value(senv, g.src_value_id, ta["src_ids"])
+                    if g.kernel == S.KERNEL_SPMM:
+                        adj = kc["adj"]
+                    else:        # weighted: densify the runtime edge weights
+                        xs_b = with_dst(ta)
+
+                        def tile_w(xs):
+                            senv_t = eval_vertex(xs["src_ids"], phase.src.nodes)
+                            _, elookup = edge_env(g.edge_nodes, xs, senv_t)
+                            return elookup(g.weight_id)[:, 0]
+
+                        w = jax.vmap(tile_w)(xs_b)             # (T, E)
+                        adj = densify_edge_weights(
+                            w, ta["edge_dst"], ta["edge_src"], ta["n_edge"],
+                            dmax=dmax, smax=int(ta["src_ids"].shape[1]))
+                    out = self.tile_kernel(adj, xsrc, ta["part_id"],
+                                           kc["flags"], n_parts=P)
+                    # partitions with no tile in this bucket are never
+                    # written by the kernel (uninitialized, may be NaN)
+                    total = total + jnp.where(kc["pmask"][:, None, None] > 0,
+                                              out, 0.0)
+                vstore[g.acc.recv_id] = unpad(total)
+
+            # ---- the pipelined tile loop, one scan per bucket
+            if scan_gathers:
                 def body(acc, xs):
-                    src_rows = xs["src_ids"]                       # (S,)
-                    esrc, edst = xs["edge_src"], xs["edge_dst"]    # (E,)
-                    emask = (jnp.arange(esrc.shape[0]) < xs["n_edge"])[:, None]
+                    emask = (jnp.arange(xs["edge_src"].shape[0])
+                             < xs["n_edge"])[:, None]
                     pid = xs["part_id"]
-                    dst_global = jnp.minimum(xs["part_start_row"] + edst, V - 1)
-
-                    senv = eval_vertex(src_rows, lvl, roles=("src",))
-                    eenv: Dict[int, Array] = {}
-
-                    def elookup(nid):
-                        if nid in eenv:
-                            return eenv[nid]
-                        return estore[nid][xs["edge_gid"]]
-
-                    for n in edge_nodes:
-                        if n.op == "recvSrc":
-                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
-                            base = senv[src_nid] if src_nid in senv else vstore[src_nid][src_rows]
-                            eenv[n.id] = base[esrc]
-                        elif n.op == "recvDst":
-                            src_nid = self.nodes[self.send_of_comm[n.comm_id]].inputs[0]
-                            eenv[n.id] = vstore[src_nid][dst_global]
-                        elif n.op == "input":
-                            continue
-                        elif n.is_send():
-                            if plan.level[n.id] != lvl:
-                                continue
-                            val = elookup(n.inputs[0])
-                            if n.op in ("sendDstSum", "sendDstMean"):
-                                contrib = jax.ops.segment_sum(
-                                    jnp.where(emask, val, 0.0), edst, num_segments=dmax)
-                                acc[f"sum{n.comm_id}"] = acc[f"sum{n.comm_id}"].at[pid].add(contrib)
-                                if n.op == "sendDstMean":
-                                    c = jax.ops.segment_sum(
-                                        jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
-                                    acc[f"cnt{n.comm_id}"] = acc[f"cnt{n.comm_id}"].at[pid].add(c[:, None])
-                            else:
-                                m = jax.ops.segment_max(
-                                    jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
-                                m = jnp.maximum(m, _NEG_INF)
-                                acc[f"max{n.comm_id}"] = acc[f"max{n.comm_id}"].at[pid].max(m)
+                    senv = eval_vertex(xs["src_ids"], phase.src.nodes)
+                    _, elookup = edge_env(phase.edge.nodes, xs, senv)
+                    edst = xs["edge_dst"]
+                    for g in scan_gathers:
+                        cid = g.acc.comm_id
+                        val = elookup(g.acc.value_id)
+                        if g.acc.kind in ("sum", "mean"):
+                            contrib = jax.ops.segment_sum(
+                                jnp.where(emask, val, 0.0), edst, num_segments=dmax)
+                            acc[f"sum{cid}"] = acc[f"sum{cid}"].at[pid].add(contrib)
+                            if g.acc.kind == "mean":
+                                cnt = jax.ops.segment_sum(
+                                    jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
+                                acc[f"cnt{cid}"] = acc[f"cnt{cid}"].at[pid].add(cnt[:, None])
                         else:
-                            eenv[n.id] = apply_compute(n.op, n.attrs, params,
-                                                       [elookup(i) for i in n.inputs])
+                            m = jax.ops.segment_max(
+                                jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
+                            m = jnp.maximum(m, _NEG_INF)
+                            acc[f"max{cid}"] = acc[f"max{cid}"].at[pid].max(m)
                     return acc, 0
 
                 for ta in tas:
-                    xs = dict(src_ids=ta["src_ids"], edge_src=ta["edge_src"],
-                              edge_dst=ta["edge_dst"], edge_gid=ta["edge_gid"],
-                              n_edge=ta["n_edge"], part_id=ta["part_id"],
-                              part_start_row=ta["part_start"][ta["part_id"]])
-                    acc, _ = jax.lax.scan(body, acc, xs)
+                    acc, _ = jax.lax.scan(body, acc, with_dst(ta))
 
-            # ---- publish gather results (padded (P,Dmax) -> (V,))
-            for s in gather_sends:
-                _, _, _, rnid = prog.channels[s.comm_id]
-                if s.op == "sendDstSum":
-                    val = acc[f"sum{s.comm_id}"]
-                elif s.op == "sendDstMean":
-                    val = acc[f"sum{s.comm_id}"] / jnp.maximum(acc[f"cnt{s.comm_id}"], 1.0)
-                else:
-                    val = acc[f"max{s.comm_id}"]
-                flat = jnp.where(pad_valid, val, 0.0).reshape(P * dmax, -1)
-                buf = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
-                buf = buf.at[pad_ids.reshape(-1)].set(flat)
-                vstore[rnid] = buf[:V]
+                # ---- publish scan-gather results (padded (P,Dmax) -> (V,))
+                for g in scan_gathers:
+                    cid = g.acc.comm_id
+                    if g.acc.kind == "sum":
+                        val = acc[f"sum{cid}"]
+                    elif g.acc.kind == "mean":
+                        val = acc[f"sum{cid}"] / jnp.maximum(acc[f"cnt{cid}"], 1.0)
+                    else:
+                        val = acc[f"max{cid}"]
+                    vstore[g.acc.recv_id] = unpad(val)
 
-        outs = sorted((n for n in self.nodes.values() if n.op == "output"), key=lambda n: n.id)
-        return [vstore[o.id] for o in outs]
+        return [vstore[o] for o in sp.outputs]
 
 
 def run_pipelined(compiled: C.CompiledGNN, graph: Graph, tiles,
                   inputs: Dict[str, Array], params: Dict[str, Array],
-                  tile_kernel: Optional[Callable] = None) -> List[Array]:
-    return PipelinedRunner(compiled, graph, tiles, tile_kernel=tile_kernel)(inputs, params)
+                  tile_kernel: Optional[Callable] = None,
+                  kernel_dispatch: Optional[bool] = None) -> List[Array]:
+    return PipelinedRunner(compiled, graph, tiles, tile_kernel=tile_kernel,
+                           kernel_dispatch=kernel_dispatch)(inputs, params)

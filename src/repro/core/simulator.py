@@ -13,9 +13,10 @@ and the energy/area models of §8.1.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from .isa import Instr
 from .streams import HWConfig, Task, build_task_graph, instr_cycles
@@ -104,8 +105,9 @@ def simulate(tasks: List[Task], stats: Dict[str, int], hw: HWConfig) -> SimResul
     # event heap: (time, seq, kind, payload)
     heap: List[Tuple[int, int, str, tuple]] = []
     seq = 0
-    ready_q: Dict[str, List[int]] = {"s": [], "e": [], "d": []}   # awaiting a stream slot
-    unit_q: Dict[str, List[Tuple[int, int]]] = {u: [] for u in free}  # (task, pc) awaiting unit
+    # FIFOs: tasks awaiting a stream slot / (task, pc) awaiting a unit
+    ready_q: Dict[str, Deque[int]] = {k: collections.deque() for k in ("s", "e", "d")}
+    unit_q: Dict[str, Deque[Tuple[int, int]]] = {u: collections.deque() for u in free}
     pc = [0] * n_tasks
 
     def admit(tid_: int, now: int):
@@ -143,12 +145,15 @@ def simulate(tasks: List[Task], stats: Dict[str, int], hw: HWConfig) -> SimResul
         free[unit] += 1
         # feed a queued instruction into the freed unit (first-ready-first-serve)
         if unit_q[unit]:
-            qtid, _qpc = unit_q[unit].pop(0)
+            qtid, _qpc = unit_q[unit].popleft()
             free[unit] -= 1
             u2, cyc2 = progs[qtid][pc[qtid]]
             assert u2 == unit
             busy[unit] += cyc2
-            heapq.heappush(heap, (now + cyc2, 1 << 20, "instr_done", (qtid, unit, cyc2)))
+            # the global seq counter keeps re-issued events deterministically
+            # ordered among same-cycle completions
+            heapq.heappush(heap, (now + cyc2, seq, "instr_done", (qtid, unit, cyc2)))
+            seq += 1
         pc[tid_] += 1
         if pc[tid_] < len(progs[tid_]):
             issue(tid_, now)
@@ -158,7 +163,7 @@ def simulate(tasks: List[Task], stats: Dict[str, int], hw: HWConfig) -> SimResul
         k = tasks[tid_].kind
         slots[k] += 1
         if ready_q[k]:
-            admit(ready_q[k].pop(0), now)
+            admit(ready_q[k].popleft(), now)
         for s2 in succs[tid_]:
             indeg[s2] -= 1
             if indeg[s2] == 0:

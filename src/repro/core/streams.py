@@ -14,6 +14,7 @@ lives in :mod:`repro.core.simulator`.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 from .isa import Instr, SDEFunctions, DISPATCH_CYCLES
@@ -74,7 +75,6 @@ def instr_cycles(ins: Instr, m: int, hw: HWConfig) -> int:
     if ins.unit == "MU":
         # output-stationary systolic: each (mu_rows x mu_cols) output block
         # streams K inputs plus fill/drain
-        import math
         blocks = math.ceil(m / hw.mu_rows) * math.ceil(ins.n / hw.mu_cols)
         fill = hw.mu_rows + hw.mu_cols
         cyc = blocks * (ins.k + fill)
@@ -85,10 +85,9 @@ def instr_cycles(ins: Instr, m: int, hw: HWConfig) -> int:
             cyc = int(cyc * 2.0)
         return cyc + DISPATCH_CYCLES
     if ins.unit == "VU":
-        import math
         lanework = m * max(ins.n, 1)
         cyc = math.ceil(lanework / hw.vu_lanes)
-        if ins.opcode.startswith(("SCTR", "GTHR")):
+        if ins.opcode.startswith(("SCTR", "GTHR", "DENS", "SFTM")):
             cyc += m  # edge-list indirection: one TH lookup per item
         if ins.opcode == "GEMV":
             cyc = math.ceil(m * ins.k / hw.vu_lanes)

@@ -6,4 +6,4 @@ the kernel taxonomy's name.
 """
 from ..tile_spmm.kernel import segment_softmax_pallas  # noqa: F401
 from ..tile_spmm.ref import segment_softmax_ref        # noqa: F401
-from ..tile_spmm.ops import gat_aggregate              # noqa: F401
+from ..tile_spmm.ops import densify_edge_scores, gat_aggregate  # noqa: F401

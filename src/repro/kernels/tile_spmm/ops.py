@@ -57,6 +57,49 @@ def gather_sources(tiles: Union[TileSet, BucketedTileSet], x):
     return jnp.asarray(x)[jnp.asarray(tiles.src_ids)]
 
 
+_NEG = -1e30  # matches the segment-softmax kernel's "no edge" sentinel
+
+
+@functools.partial(jax.jit, static_argnames=("dmax", "smax"))
+def densify_edge_weights(weights, edge_dst, edge_src, n_edge, *,
+                         dmax: int, smax: int):
+    """Runtime analogue of :func:`densify_tiles` for *computed* edge weights.
+
+    weights: (T, Emax) per-edge scalars (e.g. attention α evaluated on the
+    edge segment); edge_dst/edge_src: (T, Emax) tile-local indices; n_edge:
+    (T,) true counts.  Returns (T, dmax, smax) dense adjacency blocks with
+    parallel edges summed — the A operand of the weighted-SpMM kernel block.
+    """
+    T, E = weights.shape
+    emask = jnp.arange(E)[None, :] < n_edge[:, None]
+    w = jnp.where(emask, weights, 0.0).astype(jnp.float32)
+
+    def per_tile(w_t, ed, es):
+        return jnp.zeros((dmax, smax), jnp.float32).at[ed, es].add(w_t)
+
+    return jax.vmap(per_tile)(w, edge_dst, edge_src)
+
+
+@functools.partial(jax.jit, static_argnames=("dmax",))
+def densify_edge_scores(scores, edge_dst, n_edge, *, dmax: int):
+    """Per-edge-COLUMN score densification for the segment-softmax kernel.
+
+    scores: (T, Emax) per-edge attention logits.  Returns (T, dmax, Emax)
+    blocks where column ``j`` holds edge ``j``'s score at its destination row
+    and the ``_NEG`` sentinel everywhere else.  Giving every edge its own
+    column (instead of compacting onto source columns) keeps parallel edges
+    in separate softmax slots, so multigraphs stay exact.
+    """
+    T, E = scores.shape
+    emask = jnp.arange(E)[None, :] < n_edge[:, None]
+    s = jnp.where(emask, scores, _NEG).astype(jnp.float32)
+
+    def per_tile(s_t, ed):
+        return jnp.full((dmax, E), _NEG, jnp.float32).at[ed, jnp.arange(E)].set(s_t)
+
+    return jax.vmap(per_tile)(s, edge_dst)
+
+
 @functools.partial(jax.jit, static_argnames=("n_parts", "use_pallas", "interpret"))
 def spmm(adj, xsrc, part_id, flags, *, n_parts: int, use_pallas: bool = True,
          interpret: bool = True):

@@ -1,0 +1,17 @@
+"""Tier-1 smoke: the stream-DSE benchmark is importable and runs end-to-end
+(compile → schedule → ISA → task graph → simulator) in --smoke mode."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_bench_streams_smoke():
+    from benchmarks import bench_streams
+
+    rows = bench_streams.run(smoke=True)
+    assert rows and all(len(r) == 7 for r in rows)
+    # the reference point (2 streams, 1 MU, 2 VU) normalizes to exactly 1x
+    assert any(r[4] == "1.00x" for r in rows)
+    # both smoke models are covered
+    assert {r[0] for r in rows} == {"gcn", "gat"}

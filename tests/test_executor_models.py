@@ -45,15 +45,15 @@ def test_tiled_matches_oracle(name, strategy):
 
 
 def test_kernel_engages_on_pure_spmm_models():
-    """The Pallas inner body must actually replace the scan for sum-gather
-    phases (the previously-dead ``tile_kernel`` parameter)."""
-    g = graphs.random_graph(150, 600, seed=2, model="powerlaw")
-    bt = tiling.bucket_tiles(tiling.grid_tile(g, 4, 4, sparse=True), 3)
+    """The scheduler pass must tag pure sum-gather phases ``pallas_spmm``
+    so the Pallas inner body replaces the scan."""
+    from repro.core import schedule
     for name, engaged in [("gcn", True), ("ggnn", True), ("gin", True),
                           ("rgcn", False), ("sage", False)]:
         c = compiler.compile_gnn(models.trace_named(name, 16, 16))
-        r = pipeline.PipelinedRunner(c, g, bt, tile_kernel=tops.spmm)
-        assert bool(r._spmm_levels) == engaged, name
+        kernels = {k for ks in c.schedule(True).kernels_by_level().values()
+                   for k in ks}
+        assert (schedule.KERNEL_SPMM in kernels) == engaged, name
 
 
 @pytest.mark.parametrize("name", ["gcn", "gat"])
