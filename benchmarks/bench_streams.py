@@ -49,8 +49,10 @@ def run(quick: bool = False, smoke: bool = False):
                "MU_util", "VU_util"]
     print("== Fig 13: stream/unit design-space exploration ==")
     print(fmt_table(rows, headers))
-    if not smoke:
-        write_report("bench_streams", {"headers": headers, "rows": rows})
+    # smoke runs report under their own name so the CI artifact keeps the
+    # full-sweep history distinct from the per-PR smoke trajectory
+    write_report("bench_streams_smoke" if smoke else "bench_streams",
+                 {"headers": headers, "rows": rows})
     return rows
 
 

@@ -282,6 +282,12 @@ class CompiledGNN:
             self._schedules[key] = S.lower(self.plan, kernel_dispatch=key)
         return self._schedules[key]
 
+    def structure_signature(self, kernel_dispatch: bool = True):
+        """Structural identity of the scheduled program (serving-cache hook):
+        two compiled models with equal signatures lower to interchangeable
+        programs, so warm runners can be shared between them."""
+        return self.schedule(kernel_dispatch).structure_signature()
+
 
 def compile_gnn(tr: TR.GnnTrace, optimize: bool = True) -> CompiledGNN:
     from . import passes

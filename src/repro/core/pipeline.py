@@ -73,11 +73,24 @@ class PipelinedRunner:
     pure multi-phase scan schedule.  ``tile_kernel`` overrides the SpMM
     kernel entry point (signature
     ``kernel(adj, xsrc, part_id, flags, *, n_parts) -> (P, Dmax, F)``).
+
+    A runner's compilation depends only on its *structure signature* — the
+    scheduled program plus the tile-set shapes (``signature`` property) —
+    never on the concrete edge lists: every graph-specific array is a traced
+    argument of the jitted function.  :meth:`bind` re-derives those operands
+    for a different tile set with the same signature and :meth:`run_with`
+    executes them through the already-compiled program, which is what the
+    serving-layer program cache amortizes across requests.
+
+    ``donate_inputs=True`` donates the request's input buffers to XLA on the
+    hot path (the serving engine enables this off-CPU, where its padded
+    per-request arrays are dead after the call).
     """
 
     def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles,
                  tile_kernel: Optional[Callable] = None,
-                 kernel_dispatch: Optional[bool] = None):
+                 kernel_dispatch: Optional[bool] = None,
+                 donate_inputs: bool = False):
         from ..kernels.tile_spmm import ops as tops
 
         if kernel_dispatch is None:
@@ -86,24 +99,29 @@ class PipelinedRunner:
         self.sp: S.ScheduledProgram = compiled.schedule(kernel_dispatch)
         self.graph = graph
         self.tiles = tiles
-        self.buckets: List[TileSet] = (
-            list(tiles.buckets) if isinstance(tiles, BucketedTileSet) else [tiles])
         self.tile_kernel = tile_kernel if tile_kernel is not None else tops.spmm
         self.softmax_kernel = tops.gat_aggregate
         self.part_ids_pad, self.dmax = _padded_partition_ids(tiles)
+        self._kernels = {g.kernel for ph in self.sp.phases for g in ph.gathers}
+        self._signature = (self.sp.structure_signature(),
+                           tiles.shape_signature())
+        self._operands: Optional[Tuple] = None   # lazy bind of ctor tiles
+        self.donate_inputs = donate_inputs
+        self._jitted = jax.jit(self._run,
+                               donate_argnums=(0,) if donate_inputs else ())
 
-        kernels = {g.kernel for ph in self.sp.phases for g in ph.gathers}
-        self._kernel_const = (self._bucket_const(S.KERNEL_SPMM in kernels)
-                              if kernels & set(S.PALLAS_KERNELS) else None)
-        # the online-softmax state cannot be merged across buckets, so the
-        # segment-softmax block always runs over the unbucketed tile batch
-        self._softmax_tiles: Optional[TileSet] = None
-        self._softmax_const = None
-        if S.KERNEL_SEGMENT_SOFTMAX in kernels:
-            self._softmax_tiles = (tiles.source if isinstance(tiles, BucketedTileSet)
-                                   else tiles)
-            self._softmax_const = self._tile_const(self._softmax_tiles)
-        self._jitted = jax.jit(self._run)
+    @property
+    def signature(self) -> Tuple:
+        """(program, tile-set) structural identity this compilation serves."""
+        return self._signature
+
+    def jit_cache_size(self) -> int:
+        """Number of distinct XLA compilations behind this runner (expect 1
+        after warmup; the serving tests assert no silent retraces)."""
+        try:
+            return int(self._jitted._cache_size())
+        except AttributeError:   # older jax: no introspection, report unknown
+            return -1
 
     # ------------------------------------------------------------- constants
     def _tile_const(self, ts: TileSet) -> Dict[str, Array]:
@@ -114,29 +132,58 @@ class PipelinedRunner:
                     pmask=jnp.asarray(np.isin(np.arange(P), ts.part_id)
                                       .astype(np.float32)))
 
-    def _bucket_const(self, with_adj: bool) -> List[Dict[str, Array]]:
+    def _bucket_const(self, b: TileSet, with_adj: bool) -> Dict[str, Array]:
         """Per-bucket kernel metadata; dense adjacency only for pure SpMM."""
         from ..kernels.tile_spmm.ops import densify_tiles
-        const = []
-        for b in self.buckets:
-            kc = self._tile_const(b)
-            if with_adj:
-                adj, _ = densify_tiles(b)
-                kc["adj"] = jnp.asarray(adj)
-            const.append(kc)
-        return const
+        kc = self._tile_const(b)
+        if with_adj:
+            adj, _ = densify_tiles(b)
+            kc["adj"] = jnp.asarray(adj)
+        return kc
+
+    # ------------------------------------------------------------------ bind
+    def bind(self, tiles) -> Tuple:
+        """Device operands (tile arrays + kernel constants) for a tile set
+        structurally identical to the construction one — the per-request
+        rebind step the serving cache runs instead of re-jitting."""
+        if tiles.shape_signature() != self.tiles.shape_signature():
+            raise ValueError(
+                "tile set is not structurally identical to this runner's: "
+                f"{tiles.shape_signature()} != {self.tiles.shape_signature()}")
+        buckets: List[TileSet] = (
+            list(tiles.buckets) if isinstance(tiles, BucketedTileSet) else [tiles])
+        tas = tuple(_tile_arrays(b) for b in buckets)
+        if self._kernels & set(S.PALLAS_KERNELS):
+            kcs = tuple(self._bucket_const(b, S.KERNEL_SPMM in self._kernels)
+                        for b in buckets)
+        else:
+            kcs = tuple({} for _ in buckets)
+        # the online-softmax state cannot be merged across buckets, so the
+        # segment-softmax block always runs over the unbucketed tile batch
+        ta0 = kc0 = None
+        if S.KERNEL_SEGMENT_SOFTMAX in self._kernels:
+            st = tiles.source if isinstance(tiles, BucketedTileSet) else tiles
+            ta0 = _tile_arrays(st)
+            kc0 = self._tile_const(st)
+        return (tas, kcs, ta0, kc0)
 
     # ------------------------------------------------------------------ run
-    def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array]) -> List[Array]:
-        tas = tuple(_tile_arrays(b) for b in self.buckets)
-        kcs = (tuple(self._kernel_const) if self._kernel_const is not None
-               else tuple({} for _ in self.buckets))
-        ta0 = (_tile_arrays(self._softmax_tiles)
-               if self._softmax_tiles is not None else None)
-        kc0 = self._softmax_const
+    def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array],
+                 operands: Optional[Tuple] = None) -> List[Array]:
+        if operands is None:
+            if self._operands is None:
+                self._operands = self.bind(self.tiles)
+            operands = self._operands
+        tas, kcs, ta0, kc0 = operands
         return self._jitted({k: jnp.asarray(v) for k, v in inputs.items()},
                             {k: jnp.asarray(v) for k, v in params.items()},
                             tas, kcs, ta0, kc0)
+
+    def run_with(self, tiles, inputs: Dict[str, Array],
+                 params: Dict[str, Array]) -> List[Array]:
+        """Execute a different same-signature tile set through the warm
+        compilation (no retrace: operand shapes are identical by contract)."""
+        return self(inputs, params, operands=self.bind(tiles))
 
     # ---------------------------------------------------------- trace-time
     def _run(self, inputs, params, tas, kcs, ta0, kc0) -> List[Array]:

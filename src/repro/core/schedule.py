@@ -169,6 +169,35 @@ class ScheduledProgram:
                 return p.gathers[0].kernel
         return None
 
+    def structure_signature(self) -> Tuple:
+        """Cheap structural identity of the lowered program: phase/kernel-tag
+        layout plus the feature widths every engine compilation depends on.
+        Same signature => the same jitted runner can execute it (the serving
+        program cache keys on this together with the tile-set signature).
+        Memoized — safe to call on the per-request serving hot path."""
+        cached = getattr(self, "_structure_sig", None)
+        if cached is not None:
+            return cached
+
+        def block(nodes: Sequence[IR.IRNode]) -> Tuple:
+            # every attr participates: trace-time constants (leaky_relu slope,
+            # weight shapes, ...) bake into the compiled program, so programs
+            # differing only there must not share a warm runner
+            return tuple((n.op, n.dim,
+                          tuple(sorted((k, repr(v))
+                                       for k, v in n.attrs.items())))
+                         for n in nodes)
+
+        sig = ("sched", self.prog.name, self.kernel_dispatch,
+               tuple((p.level, tuple(g.kernel for g in p.gathers),
+                      block(p.src.fresh), block(p.edge.fresh),
+                      block(p.dst.fresh))
+                     for p in self.phases),
+               self.src_load_dim, self.dst_load_dim, self.edge_feat_dim,
+               self.out_dim)
+        self._structure_sig = sig
+        return sig
+
     def pretty(self) -> str:
         lines = [f"ScheduledProgram<{self.prog.name}> "
                  f"(kernel_dispatch={self.kernel_dispatch})"]

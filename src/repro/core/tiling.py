@@ -101,6 +101,16 @@ class TileSet:
         """(src_slots, edge_slots) the executor materializes for tile ``t``."""
         return self.s_max, self.e_max
 
+    # ---- structural identity (program-cache key; serving layer) ------------
+    def shape_signature(self) -> Tuple:
+        """Everything a jitted runner's compilation depends on — padded tile
+        shapes and the partition table — and nothing edge-list-specific.
+        Two tile sets with equal signatures can share one compiled program."""
+        return ("tiles", self.n_tiles, self.s_max, self.e_max,
+                self.n_dst_parts, self.n_src_parts, self.n_vertices,
+                tuple(self.part_start.tolist()),
+                tuple(self.part_size.tolist()))
+
 
 def _even_bounds(n: int, parts: int) -> np.ndarray:
     """parts+1 boundaries of an even split of range(n)."""
@@ -272,6 +282,10 @@ class BucketedTileSet:
     def padded_dims_of_tile(self, t: int) -> Tuple[int, int]:
         return int(self._pad_s[t]), int(self._pad_e[t])
 
+    def shape_signature(self) -> Tuple:
+        return ("btiles", tuple(b.shape_signature() for b in self.buckets),
+                self.source.shape_signature())
+
 
 def _repack(tiles: TileSet, idx: np.ndarray, pad_multiple: int) -> TileSet:
     """A TileSet over ``tiles[idx]`` re-padded to the selection's own maxima."""
@@ -321,6 +335,48 @@ def bucket_tiles(tiles: TileSet, n_buckets: int = 4,
         buckets.append(_repack(tiles, sel, pad_multiple))
         index.append(sel)
     return BucketedTileSet(buckets=buckets, tile_index=index, source=tiles)
+
+
+def pad_tileset(tiles: TileSet, n_tiles: int, s_max: int, e_max: int) -> TileSet:
+    """Pad a (partition-major) tile set to ``(n_tiles, s_max, e_max)`` with
+    zero-edge filler tiles, so structurally-similar graphs snap onto one
+    shape signature and share a compiled program (serving cache).
+
+    Filler tiles carry ``part_id = P-1`` and append after the real tiles,
+    extending the last partition's run: under the Pallas FIRST/LAST flag
+    protocol they add a zero adjacency block to that partition's accumulator
+    (or, if the partition had no real tiles, flush an all-zero block — the
+    correct empty-gather result), and the ``lax.scan`` path masks them out
+    via ``n_edge = 0``.
+    """
+    if (n_tiles, s_max, e_max) == (tiles.n_tiles, tiles.s_max, tiles.e_max):
+        return tiles
+    if (n_tiles < tiles.n_tiles or s_max < tiles.s_max or e_max < tiles.e_max):
+        raise ValueError(
+            f"pad_tileset cannot shrink {(tiles.n_tiles, tiles.s_max, tiles.e_max)}"
+            f" -> {(n_tiles, s_max, e_max)}")
+    T = tiles.n_tiles
+
+    def grow(a: np.ndarray, cols: int) -> np.ndarray:
+        out = np.zeros((n_tiles, cols), a.dtype)
+        out[:T, :a.shape[1]] = a
+        return out
+
+    def grow1(a: np.ndarray, fill: int = 0) -> np.ndarray:
+        out = np.full((n_tiles,), fill, a.dtype)
+        out[:T] = a
+        return out
+
+    return TileSet(
+        src_ids=grow(tiles.src_ids, s_max),
+        edge_src=grow(tiles.edge_src, e_max),
+        edge_dst=grow(tiles.edge_dst, e_max),
+        edge_gid=grow(tiles.edge_gid, e_max),
+        n_src=grow1(tiles.n_src), n_edge=grow1(tiles.n_edge),
+        part_id=grow1(tiles.part_id, fill=tiles.n_dst_parts - 1),
+        part_start=tiles.part_start, part_size=tiles.part_size,
+        n_dst_parts=tiles.n_dst_parts, n_src_parts=tiles.n_src_parts,
+        sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges)
 
 
 def choose_grid(n_vertices: int, dim: int, vmem_budget_bytes: int = 8 << 20,

@@ -9,7 +9,7 @@ structurally-matched synthetic stand-in; `scale` shrinks it for CPU runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,6 +44,110 @@ class Graph:
         return Graph(src=self.src[order], dst=self.dst[order], n_vertices=self.n_vertices,
                      edge_type=None if self.edge_type is None else self.edge_type[order],
                      name=self.name)
+
+
+# ---------------------------------------------------------------------------
+# multi-graph batching (serving substrate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GraphBatch:
+    """Block-diagonal merge of many small graphs into one super-graph.
+
+    One ScheduledProgram execution over ``graph`` serves every member graph
+    at once: vertex ids of graph ``i`` are shifted by ``vertex_offsets[i]``,
+    edge rows by ``edge_offsets[i]``, and no cross-graph edges exist, so
+    per-member results are exact slices of the merged result.
+    """
+
+    graph: Graph
+    vertex_offsets: np.ndarray   # int64 (G+1,) — member i owns [o[i], o[i+1])
+    edge_offsets: np.ndarray     # int64 (G+1,)
+    graph_ids: np.ndarray        # int32 (V,) — member index of each vertex
+
+    @property
+    def n_graphs(self) -> int:
+        return len(self.vertex_offsets) - 1
+
+    def unbatch_vertex(self, arr) -> List[np.ndarray]:
+        """Split a merged (V, d) vertex array back into per-graph arrays."""
+        arr = np.asarray(arr)
+        o = self.vertex_offsets
+        return [arr[o[i]:o[i + 1]] for i in range(self.n_graphs)]
+
+    def unbatch_edge(self, arr) -> List[np.ndarray]:
+        """Split a merged (E, d) edge array back into per-graph arrays."""
+        arr = np.asarray(arr)
+        o = self.edge_offsets
+        return [arr[o[i]:o[i + 1]] for i in range(self.n_graphs)]
+
+    def graph_pool(self, arr, reduce: str = "mean") -> np.ndarray:
+        """Per-graph readout of a merged (V, d) vertex array -> (G, d).
+        Accepts class-padded arrays (rows beyond the real vertices ignored).
+        """
+        arr = np.asarray(arr)
+        V = len(self.graph_ids)
+        if arr.shape[0] < V:
+            raise ValueError(f"vertex array has {arr.shape[0]} rows, "
+                             f"expected >= {V}")
+        arr = arr[:V]
+        G = self.n_graphs
+        out = np.zeros((G,) + arr.shape[1:], np.float64)
+        np.add.at(out, self.graph_ids, arr)
+        if reduce == "mean":
+            sizes = np.diff(self.vertex_offsets).astype(np.float64)
+            out /= np.maximum(sizes, 1.0)[:, None]
+            # means of integer features are fractional — stay floating
+            return out.astype(np.result_type(arr.dtype, np.float32))
+        if reduce != "sum":
+            raise ValueError(reduce)
+        return out.astype(arr.dtype)
+
+
+def batch_graphs(graphs: Sequence[Graph], name: str = "batch") -> GraphBatch:
+    """Merge ``graphs`` into one block-diagonal super-graph (DGL/PyG-style).
+
+    Edge indices are offset per member; ``edge_type`` is concatenated when
+    every member carries it (mixing typed and untyped members is an error).
+    """
+    if not graphs:
+        raise ValueError("batch_graphs needs at least one graph")
+    vo = np.zeros(len(graphs) + 1, np.int64)
+    eo = np.zeros(len(graphs) + 1, np.int64)
+    for i, g in enumerate(graphs):
+        vo[i + 1] = vo[i] + g.n_vertices
+        eo[i + 1] = eo[i] + g.n_edges
+    src = np.concatenate([g.src.astype(np.int64) + vo[i]
+                          for i, g in enumerate(graphs)]).astype(np.int32)
+    dst = np.concatenate([g.dst.astype(np.int64) + vo[i]
+                          for i, g in enumerate(graphs)]).astype(np.int32)
+    typed = [g.edge_type is not None for g in graphs]
+    if any(typed) and not all(typed):
+        raise ValueError("cannot batch typed and untyped graphs together")
+    etype = (np.concatenate([g.edge_type for g in graphs]).astype(np.int32)
+             if all(typed) else None)
+    gids = np.concatenate([np.full(g.n_vertices, i, np.int32)
+                           for i, g in enumerate(graphs)])
+    merged = Graph(src=src, dst=dst, n_vertices=int(vo[-1]), edge_type=etype,
+                   name=name)
+    merged.validate()
+    return GraphBatch(graph=merged, vertex_offsets=vo, edge_offsets=eo,
+                      graph_ids=gids)
+
+
+def pad_graph(graph: Graph, n_vertices: int) -> Graph:
+    """Grow the vertex set to ``n_vertices`` with edge-less padding vertices.
+
+    Padding vertices receive no messages and send none, so real-vertex
+    results are unchanged; the serving layer uses this to snap a merged
+    request batch onto a shared size class (one compiled program per class).
+    """
+    if n_vertices < graph.n_vertices:
+        raise ValueError(f"cannot shrink graph {graph.n_vertices} -> {n_vertices}")
+    if n_vertices == graph.n_vertices:
+        return graph
+    return Graph(src=graph.src, dst=graph.dst, n_vertices=n_vertices,
+                 edge_type=graph.edge_type, name=graph.name)
 
 
 def random_graph(n_vertices: int, n_edges: int, seed: int = 0,

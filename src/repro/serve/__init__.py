@@ -1,0 +1,22 @@
+"""Batched multi-graph inference serving (ROADMAP north star: many small
+graphs per second, one compilation per *structure* instead of per graph).
+
+Layers:
+
+* :mod:`repro.serve.signature` — size-class quantization and the structural
+  request signature (tile shapes + kernel tags + feature dims).
+* :mod:`repro.serve.cache` — the LRU compiled-program cache with hit/miss/
+  compile/eviction counters.
+* :mod:`repro.serve.engine` — :class:`InferenceServer`, the front door:
+  ``submit(graphs, inputs) -> per-graph outputs``.
+"""
+from .cache import CacheStats, ProgramCache  # noqa: F401
+from .engine import InferenceServer  # noqa: F401
+from .signature import (  # noqa: F401
+    ShapeRegistry,
+    canonical_tiles,
+    quantize,
+    serving_grid,
+    size_class,
+    structure_signature,
+)

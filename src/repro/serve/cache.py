@@ -1,0 +1,84 @@
+"""LRU cache of lowered programs / warm jitted runners, with counters.
+
+A cache *hit* means a request batch reuses an existing compilation — the
+whole point of the serving layer, since per-graph jit dominates small-graph
+inference cost.  Every miss invokes the builder exactly once, so
+``compiles`` is the miss count under a clearer name; tests assert it stays
+flat after warmup.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Dict, Hashable, Iterator, Optional
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def compiles(self) -> int:
+        """Builder invocations — one per miss, by construction."""
+        return self.misses
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(hits=self.hits, misses=self.misses, compiles=self.compiles,
+                    evictions=self.evictions, hit_rate=round(self.hit_rate, 4))
+
+
+class ProgramCache:
+    """Bounded LRU mapping structure signatures -> warm compiled runners."""
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "collections.OrderedDict[Hashable, Any]" = \
+            collections.OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self) -> Iterator[Hashable]:
+        return iter(self._entries.keys())
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        """Peek without counting a request (no builder, no LRU eviction)."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        return None
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        if key in self._entries:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.stats.misses += 1
+        value = builder()
+        self._entries[key] = value
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return value
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def reset_counters(self) -> None:
+        self.stats = CacheStats()

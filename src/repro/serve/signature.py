@@ -1,0 +1,135 @@
+"""Structural request signatures and size-class quantization.
+
+The serving cache must key compiled programs on *structure*, never on edge
+lists: a :class:`~repro.core.pipeline.PipelinedRunner`'s compilation depends
+only on the scheduled program (kernel tags + feature dims) and the padded
+tile-set shapes.  Everything here exists to make those shapes *repeat*
+across a stream of similar-but-not-identical graphs:
+
+* :func:`quantize` snaps counts up to powers of two, so small variance in
+  V/E maps onto one size class;
+* :func:`serving_grid` picks the tiling grid deterministically from the
+  padded vertex count;
+* :class:`ShapeRegistry` fixes each class's padded shapes from its first
+  request (plus growth headroom), so every later request of the class pads
+  onto *identical* shapes — pure quantization would flake whenever a
+  realized dimension straddles a power-of-two boundary;
+* :func:`canonical_tiles` is the stateless power-of-two variant for one-shot
+  use;
+* :func:`structure_signature` combines the program and tile signatures into
+  the cache key.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Hashable, Tuple, Union
+
+from ..core import compiler as C
+from ..core.tiling import BucketedTileSet, TileSet, grid_tile, pad_tileset
+from ..gnn.graphs import Graph, pad_graph
+
+
+def quantize(n: int, floor: int = 8) -> int:
+    """Round ``n`` up to the next power of two, at least ``floor``."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def size_class(graph: Graph) -> Tuple[int, int, bool]:
+    """Coarse per-graph bucket the server groups requests by: quantized
+    (V, E) plus whether the graph carries edge types."""
+    return (quantize(graph.n_vertices), quantize(max(graph.n_edges, 1)),
+            graph.edge_type is not None)
+
+
+def serving_grid(n_vertices: int, target_part: int = 256,
+                 max_parts: int = 64) -> Tuple[int, int]:
+    """Deterministic (n_dst_parts, n_src_parts) for a quantized vertex count
+    — the same size class must always tile on the same grid."""
+    parts = min(quantize(max(n_vertices // target_part, 1), floor=1), max_parts)
+    return parts, parts
+
+
+def canonical_tiles(graph: Graph, grid: Tuple[int, int],
+                    pad_multiple: int = 8) -> TileSet:
+    """Sparse-tile ``graph`` and snap the batch onto quantized shapes.
+
+    The result's :meth:`~repro.core.tiling.TileSet.shape_signature` is stable
+    across graphs of one size class with similar degree structure, which is
+    what turns a stream of distinct graphs into program-cache hits.
+    """
+    ts = grid_tile(graph, grid[0], grid[1], sparse=True,
+                   pad_multiple=pad_multiple)
+    return pad_tileset(ts, quantize(ts.n_tiles, floor=1),
+                       quantize(ts.s_max), quantize(ts.e_max))
+
+
+def _round_up(x: float, multiple: int) -> int:
+    return int(math.ceil(x / multiple)) * multiple
+
+
+class ShapeRegistry:
+    """Per-size-class canonical padded shapes, fixed at first sight.
+
+    The first request of a class registers padded dimensions with
+    ``headroom`` (default 25%) over what it realized; every later request of
+    the class pads onto exactly those shapes — a guaranteed program-cache
+    hit.  Only a request that *exceeds* a registered dimension bumps the
+    class (shapes grow monotonically, costing one recompile), so a
+    steady-state stream converges to zero recompilations regardless of where
+    realized sizes sit relative to power-of-two boundaries.
+    """
+
+    def __init__(self, headroom: float = 0.25, target_part: int = 256,
+                 pad_multiple: int = 8):
+        self.headroom = headroom
+        self.target_part = target_part
+        self.pad_multiple = pad_multiple
+        self._shapes: Dict[Hashable, Dict] = {}
+
+    def __len__(self) -> int:
+        return len(self._shapes)
+
+    def canonical(self, key: Hashable, graph: Graph
+                  ) -> Tuple[Graph, TileSet, int]:
+        """Pad ``graph`` and its tile batch onto the class's registered
+        shapes; returns (padded graph, padded tiles, padded edge-row count).
+        """
+        grow = 1.0 + self.headroom
+        entry = self._shapes.setdefault(
+            key, dict(v_pad=0, e_rows=0, tile=(0, 0, 0)))
+        V, E = graph.n_vertices, max(graph.n_edges, 1)
+        if V > entry["v_pad"]:
+            entry["v_pad"] = _round_up(V * grow, 64)
+        if E > entry["e_rows"]:
+            entry["e_rows"] = _round_up(E * grow, 64)
+        padded = pad_graph(graph, entry["v_pad"])
+        grid = serving_grid(entry["v_pad"], self.target_part)
+        raw = grid_tile(padded, grid[0], grid[1], sparse=True,
+                        pad_multiple=self.pad_multiple)
+        T, s, e = entry["tile"]
+        if raw.n_tiles > T:
+            T = _round_up(raw.n_tiles * grow, 2)
+        T = max(T, 1)    # an edgeless graph tiles to zero tiles; keep one
+        # filler so the kernels always see a non-empty grid
+        if raw.s_max > s:
+            s = _round_up(raw.s_max * grow, self.pad_multiple)
+        if raw.e_max > e:
+            e = _round_up(raw.e_max * grow, self.pad_multiple)
+        entry["tile"] = (T, s, e)
+        return padded, pad_tileset(raw, T, s, e), entry["e_rows"]
+
+
+def structure_signature(model: Union[str, C.CompiledGNN],
+                        tiles: Union[TileSet, BucketedTileSet],
+                        padded_edges: int = 0,
+                        kernel_dispatch: bool = True) -> Tuple:
+    """The compiled-program cache key: program structure + tile shapes +
+    the padded edge-input row count (edge-space input arrays are traced, so
+    their length is a compilation input too).  Raw edge lists never enter.
+    """
+    if isinstance(model, str):
+        from ..gnn import models as M
+        model = C.compile_gnn(M.trace_named(model))
+    return (model.structure_signature(kernel_dispatch),
+            tiles.shape_signature(), int(padded_edges))

@@ -15,3 +15,17 @@ def test_bench_streams_smoke():
     assert any(r[4] == "1.00x" for r in rows)
     # both smoke models are covered
     assert {r[0] for r in rows} == {"gcn", "gat"}
+
+
+def test_bench_serving_smoke():
+    """Acceptance (ISSUE 3): batched serving >= 2x graphs/sec over the
+    per-graph sequential baseline at batch 64, with a > 90% post-warmup
+    cache hit rate and zero recompilations on the repeated stream."""
+    from benchmarks import bench_serving
+
+    metrics = bench_serving.run(smoke=True)
+    m = metrics["gcn"]
+    assert m["speedup_b64"] >= 2.0, m
+    for b, st in m["cache"].items():
+        assert st["recompiles_after_warmup"] == 0, (b, st)
+        assert st["post_warmup_hit_rate"] > 0.9, (b, st)

@@ -1,0 +1,270 @@
+"""Serving-layer tests (ISSUE 3): batching substrate, program-cache
+semantics, and batched-vs-sequential parity.
+
+Pinned here: (a) block-diagonal batching round-trips exactly; (b) the
+structural signature hits on same-structure/different-edges and misses when
+feature dims or kernel tags change; (c) a repeated-signature stream serves
+with > 90% cache hits and ZERO recompilations after warmup (compile counter
++ jit-cache introspection); (d) batched outputs match the per-graph oracle
+on >= 3 paper models.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor, pipeline, tiling
+from repro.gnn import graphs, models
+from repro.serve import (InferenceServer, ProgramCache, ShapeRegistry,
+                         canonical_tiles, quantize, serving_grid, size_class,
+                         structure_signature)
+
+TOL = 5e-4
+
+
+def _compiled(name, dim=16):
+    tr = models.trace_named(name, dim, dim)
+    return tr, compiler.compile_gnn(tr)
+
+
+def _stream(tr, name, n, v=48, e=200, seed0=0):
+    etypes = 3 if models.MODELS[name].needs_etype else None
+    gs = [graphs.random_graph(v, e, seed=seed0 + k, model="powerlaw",
+                              n_edge_types=etypes) for k in range(n)]
+    ins = [models.init_inputs(tr, g, seed=seed0 + k)
+           for k, g in enumerate(gs)]
+    return gs, ins
+
+
+# ---------------------------------------------------------------------------
+# batching substrate
+# ---------------------------------------------------------------------------
+
+def test_batch_graphs_roundtrip():
+    gs = [graphs.random_graph(10 + 3 * i, 30 + 5 * i, seed=i) for i in range(4)]
+    batch = graphs.batch_graphs(gs)
+    assert batch.n_graphs == 4
+    assert batch.graph.n_vertices == sum(g.n_vertices for g in gs)
+    assert batch.graph.n_edges == sum(g.n_edges for g in gs)
+    batch.graph.validate()
+    # block-diagonal: every edge stays inside its member's vertex range
+    for i, g in enumerate(gs):
+        lo, hi = batch.vertex_offsets[i], batch.vertex_offsets[i + 1]
+        e0, e1 = batch.edge_offsets[i], batch.edge_offsets[i + 1]
+        assert ((batch.graph.src[e0:e1] >= lo) & (batch.graph.src[e0:e1] < hi)).all()
+        assert ((batch.graph.dst[e0:e1] >= lo) & (batch.graph.dst[e0:e1] < hi)).all()
+        np.testing.assert_array_equal(batch.graph.src[e0:e1] - lo, g.src)
+    # unbatch inverts the merge
+    varr = np.arange(batch.graph.n_vertices, dtype=np.float32)[:, None]
+    parts = batch.unbatch_vertex(varr)
+    assert [p.shape[0] for p in parts] == [g.n_vertices for g in gs]
+    np.testing.assert_array_equal(np.concatenate(parts), varr)
+    earr = np.arange(batch.graph.n_edges, dtype=np.float32)[:, None]
+    assert [p.shape[0] for p in batch.unbatch_edge(earr)] == \
+        [g.n_edges for g in gs]
+    # per-graph readout
+    pooled = batch.graph_pool(np.ones((batch.graph.n_vertices, 2)), "sum")
+    np.testing.assert_allclose(pooled[:, 0], [g.n_vertices for g in gs])
+    np.testing.assert_allclose(batch.graph_pool(varr, "mean")[:, 0],
+                               [varr[batch.vertex_offsets[i]:
+                                     batch.vertex_offsets[i + 1]].mean()
+                                for i in range(4)])
+    # class-padded arrays pool identically; short arrays are rejected
+    vpad = np.concatenate([varr, np.full((7, 1), 1e9, np.float32)])
+    np.testing.assert_allclose(batch.graph_pool(vpad, "sum"),
+                               batch.graph_pool(varr, "sum"))
+    with pytest.raises(ValueError):
+        batch.graph_pool(varr[:-1])
+    # integer means stay fractional (no silent truncating cast)
+    imean = batch.graph_pool(varr.astype(np.int32), "mean")
+    assert np.issubdtype(imean.dtype, np.floating)
+    np.testing.assert_allclose(imean, batch.graph_pool(varr, "mean"))
+
+
+def test_batch_graphs_rejects_mixed_edge_types():
+    g1 = graphs.random_graph(10, 20, seed=0, n_edge_types=3)
+    g2 = graphs.random_graph(10, 20, seed=1)
+    with pytest.raises(ValueError):
+        graphs.batch_graphs([g1, g2])
+
+
+def test_pad_graph_and_tileset_preserve_results():
+    """Padding vertices + filler tiles is invisible to real-vertex outputs,
+    under both the scan and the Pallas kernel paths."""
+    g = graphs.random_graph(90, 380, seed=7, model="powerlaw")
+    for name in ("gcn", "gat"):
+        tr, c = _compiled(name)
+        params = models.init_params(tr)
+        inputs = models.init_inputs(tr, g)
+        ref = executor.run_reference(tr, g, inputs, params)
+        padded = graphs.pad_graph(g, 128)
+        pin = {k: np.concatenate([v, np.zeros((128 - 90,) + v.shape[1:],
+                                              v.dtype)])
+               if k != "etype" else v for k, v in inputs.items()}
+        ts = tiling.grid_tile(padded, 4, 4, sparse=True)
+        pts = tiling.pad_tileset(ts, ts.n_tiles + 5, ts.s_max + 8,
+                                 ts.e_max + 16)
+        for kd in (False, True):
+            out = pipeline.run_pipelined(c, padded, pts, pin, params,
+                                         kernel_dispatch=kd)
+            err = float(np.max(np.abs(np.asarray(out[0])[:90] - ref[0])))
+            assert err < TOL, (name, kd, err)
+
+
+# ---------------------------------------------------------------------------
+# program-cache semantics
+# ---------------------------------------------------------------------------
+
+def test_program_cache_lru_and_counters():
+    cache = ProgramCache(capacity=2)
+    built = []
+    for key in ("a", "b", "a", "c", "a"):   # c evicts b; final a still hits
+        cache.get_or_build(key, lambda k=key: built.append(k) or k.upper())
+    assert built == ["a", "b", "c"]
+    assert cache.stats.compiles == 3 and cache.stats.hits == 2
+    assert cache.stats.evictions == 1 and len(cache) == 2
+    assert "b" not in cache and cache.get("a") == "A"
+
+
+def test_signature_hits_same_structure_different_edges():
+    """Two different random graphs of one size class share the cache key
+    once the shape registry has seen the class."""
+    _, c = _compiled("gcn")
+    registry = ShapeRegistry()
+    keys = []
+    for seed in (0, 1, 2, 3):
+        g = graphs.random_graph(64, 256, seed=seed, model="powerlaw")
+        _, ts, e_rows = registry.canonical(size_class(g), g)
+        keys.append(structure_signature(c, ts, e_rows))
+    assert len(set(keys[1:])) == 1      # everything after first sight hits
+    assert keys[0] == keys[1]           # headroom absorbed seed-0's shapes
+
+
+def test_signature_misses_on_feature_dim_change():
+    _, c16 = _compiled("gcn", dim=16)
+    _, c24 = _compiled("gcn", dim=24)
+    g = graphs.random_graph(64, 256, seed=0)
+    vq = quantize(g.n_vertices)
+    ts = canonical_tiles(graphs.pad_graph(g, vq), serving_grid(vq))
+    assert structure_signature(c16, ts) != structure_signature(c24, ts)
+
+
+def test_signature_misses_on_kernel_tag_change():
+    g = graphs.random_graph(64, 256, seed=0)
+    vq = quantize(g.n_vertices)
+    ts = canonical_tiles(graphs.pad_graph(g, vq), serving_grid(vq))
+    _, cg = _compiled("gcn")
+    _, ca = _compiled("gat")
+    # different model -> different kernel tags (pallas_spmm vs segment_softmax)
+    assert structure_signature(cg, ts) != structure_signature(ca, ts)
+    # same model, dispatch off -> scan tags -> also a different program
+    assert structure_signature(cg, ts, kernel_dispatch=True) != \
+        structure_signature(cg, ts, kernel_dispatch=False)
+
+
+def test_signature_misses_on_node_attr_change():
+    """Trace-time constants (e.g. leaky_relu slope) bake into the compiled
+    program, so programs differing only there must not share a runner."""
+    from repro.core.trace import trace_model
+
+    def build(slope):
+        def b(tr, g):
+            x = tr.input_vertex(8, "x")
+            tr.mark_output(g.gather_sum(g.scatter_src(x.leaky_relu(slope))))
+        return b
+
+    ca = compiler.compile_gnn(trace_model(build(0.2), name="m"))
+    cb = compiler.compile_gnn(trace_model(build(0.01), name="m"))
+    assert ca.structure_signature() != cb.structure_signature()
+
+
+def test_server_cache_hit_across_requests_miss_across_classes():
+    tr, c = _compiled("gcn")
+    params = models.init_params(tr)
+    server = InferenceServer(c, params, cache_capacity=8)
+    gs1, ins1 = _stream(tr, "gcn", 4, seed0=0)
+    gs2, ins2 = _stream(tr, "gcn", 4, seed0=100)      # same class, new edges
+    server.submit(gs1, ins1)
+    server.submit(gs2, ins2)
+    assert server.compile_count == 1 and server.cache.stats.hits == 1
+    # a much bigger graph lands in a different size class -> one new compile
+    gbig, ibig = _stream(tr, "gcn", 4, v=300, e=1400, seed0=7)
+    server.submit(gbig, ibig)
+    assert server.compile_count == 2
+
+
+def test_repeated_stream_hit_rate_and_zero_recompiles():
+    """Acceptance: > 90% hit rate and zero recompilations after warmup on a
+    repeated-signature stream, via the compile counter AND jit introspection."""
+    tr, c = _compiled("gcn")
+    params = models.init_params(tr)
+    server = InferenceServer(c, params)
+    warm_g, warm_i = _stream(tr, "gcn", 6, seed0=0)
+    server.submit(warm_g, warm_i)                     # warmup: one compile
+    compiles_after_warmup = server.compile_count
+    for req in range(1, 12):
+        gs, ins = _stream(tr, "gcn", 6, seed0=req * 50)
+        server.submit(gs, ins)
+    st = server.cache.stats
+    assert server.compile_count == compiles_after_warmup == 1
+    post = st.hits / (st.requests - 1)                # exclude the warmup miss
+    assert post > 0.9, f"post-warmup hit rate {post:.2f}"
+    runner = next(iter(server.cache._entries.values()))
+    if runner.jit_cache_size() >= 0:                  # no silent XLA retraces
+        assert runner.jit_cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-sequential parity (>= 3 paper models)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["gcn", "gat", "rgcn", "sage"])
+def test_batched_serving_matches_per_graph_oracle(name):
+    tr, c = _compiled(name)
+    params = models.init_params(tr)
+    server = InferenceServer(c, params)
+    gs, ins = _stream(tr, name, 6, seed0=3)
+    outs = server.submit(gs, ins)
+    for g, inp, out in zip(gs, ins, outs):
+        ref = executor.run_reference(tr, g, inp, params)
+        assert len(ref) == len(out)
+        for r, o in zip(ref, out):
+            assert o.shape == np.asarray(r).shape
+            err = float(np.max(np.abs(np.asarray(r) - o)))
+            assert err < TOL, (name, err)
+
+
+def test_server_groups_mixed_sizes_in_one_submit():
+    """One submit with two size classes: every graph still comes back exact
+    and in order; two compilations, one per class."""
+    tr, c = _compiled("gcn")
+    params = models.init_params(tr)
+    server = InferenceServer(c, params)
+    small_g, small_i = _stream(tr, "gcn", 3, v=40, e=150, seed0=0)
+    big_g, big_i = _stream(tr, "gcn", 3, v=260, e=1200, seed0=9)
+    gs = [small_g[0], big_g[0], small_g[1], big_g[1], small_g[2], big_g[2]]
+    ins = [small_i[0], big_i[0], small_i[1], big_i[1], small_i[2], big_i[2]]
+    outs = server.submit(gs, ins)
+    assert server.compile_count == 2
+    for g, inp, out in zip(gs, ins, outs):
+        ref = executor.run_reference(tr, g, inp, params)
+        assert float(np.max(np.abs(np.asarray(ref[0]) - out[0]))) < TOL
+
+
+def test_server_handles_edgeless_graphs():
+    """A graph with no edges must serve (zero aggregation), not crash the
+    kernel grid with a zero-tile batch."""
+    tr, c = _compiled("gcn")
+    params = models.init_params(tr)
+    server = InferenceServer(c, params)
+    g = graphs.Graph(src=np.empty(0, np.int32), dst=np.empty(0, np.int32),
+                     n_vertices=8, name="edgeless")
+    inp = models.init_inputs(tr, g)
+    (out,) = server.submit([g], [inp])[0]
+    ref = executor.run_reference(tr, g, inp, params)
+    assert float(np.max(np.abs(np.asarray(ref[0]) - out))) < TOL
+
+
+def test_size_class_groups_similar_graphs():
+    a = graphs.random_graph(60, 240, seed=0)
+    b = graphs.random_graph(55, 230, seed=1)
+    big = graphs.random_graph(400, 2000, seed=2)
+    assert size_class(a) == size_class(b) != size_class(big)
