@@ -26,7 +26,7 @@ from repro.gnn import graphs, models
 from .common import BENCH_GRAPHS, fmt_table, timeit, write_report
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, layers: int = 1):
     rows = []
     # two datasets in the default run (per-model jit compiles dominate);
     # the tiling/E2V/stream benches cover the remaining datasets' trends
@@ -37,7 +37,8 @@ def run(quick: bool = False):
         r = reorder.degree_sort(g0)
         ts = tiling.grid_tile(r.graph, 8, 8, sparse=True)
         for name in model_names:
-            tr = models.trace_named(name)
+            tr = (models.trace_named(name) if layers == 1
+                  else models.trace_stacked(name, layers))
             c = compiler.compile_gnn(tr)
             params = models.init_params(tr)
             inputs0 = models.init_inputs(tr, g0)
@@ -61,11 +62,19 @@ def run(quick: bool = False):
     headers = ["dataset", "model", "cpu_whole_ms", "cpu_tiled_ms", "sw_speedup",
                "zipper_sim_ms", "sim_speedup_vs_cpu", "zipper_energy_mJ",
                "tpuv5e_sim_ms"]
-    print("== Fig 9/10: speedup & energy ==")
+    print(f"== Fig 9/10: speedup & energy (layers={layers}) ==")
     print(fmt_table(rows, headers))
-    write_report("bench_speedup", {"headers": headers, "rows": rows})
+    write_report("bench_speedup",
+                 {"headers": headers, "rows": rows, "layers": layers})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sweep")
+    ap.add_argument("--layers", type=int, default=1,
+                    help="stack depth of the benchmarked models")
+    args = ap.parse_args()
+    run(quick=args.quick, layers=args.layers)

@@ -15,7 +15,7 @@ from repro.gnn import graphs, models
 from .common import fmt_table, write_report
 
 
-def run(quick: bool = False, smoke: bool = False):
+def run(quick: bool = False, smoke: bool = False, layers: int = 1):
     if smoke:
         g = graphs.random_graph(200, 800, seed=0, model="powerlaw",
                                 n_edge_types=3)
@@ -32,7 +32,9 @@ def run(quick: bool = False, smoke: bool = False):
 
     rows = []
     for name in model_names:
-        sde = isa.emit_sde(compiler.compile_gnn(models.trace_named(name)).plan)
+        tr = (models.trace_named(name) if layers == 1
+              else models.trace_stacked(name, layers))
+        sde = isa.emit_sde(compiler.compile_gnn(tr).plan)
         base = simulator.simulate_model(
             sde, ts, HWConfig(n_sstreams=2, n_estreams=2, n_mu=1, n_vu=2)).cycles
         for streams in streams_sw:
@@ -63,5 +65,7 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true", help="reduced sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny graph + minimal sweep (CI smoke)")
+    ap.add_argument("--layers", type=int, default=1,
+                    help="stack depth of the benchmarked models")
     args = ap.parse_args()
-    run(quick=args.quick, smoke=args.smoke)
+    run(quick=args.quick, smoke=args.smoke, layers=args.layers)

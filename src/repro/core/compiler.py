@@ -111,6 +111,7 @@ def construct_ir(tr: TR.GnnTrace) -> IR.IRProgram:
     for n in tr.nodes:  # trace order is topological
         if is_param(n):
             continue
+        lay = tr.layer_of.get(n.id, 0)
         if is_gop(n):
             src_trace = tr.node(n.inputs[0])
             # send lives in the producer's component
@@ -126,34 +127,35 @@ def construct_ir(tr: TR.GnnTrace) -> IR.IRProgram:
                 recv_op = IR.SEND_TO_RECV[send_op]
             send = IR.IRNode(
                 id=prog.fresh_id(), op=send_op, inputs=[_mapped_input(n.inputs[0])],
-                dim=n.dim, comm_id=cid,
+                dim=n.dim, comm_id=cid, layer=lay,
                 attrs={"reduce": n.attrs.get("reduce")} if n.op == "gather" else {},
             )
             send_seg.add(send)
-            recv = IR.IRNode(id=prog.fresh_id(), op=recv_op, inputs=[], dim=n.dim, comm_id=cid)
+            recv = IR.IRNode(id=prog.fresh_id(), op=recv_op, inputs=[], dim=n.dim,
+                             comm_id=cid, layer=lay)
             recv_seg.add(recv)
             irid_of[("r", n.id)] = recv.id
             continue
         seg = seg_of(("n", n.id))
         if n.op == "input":
             node = IR.IRNode(id=prog.fresh_id(), op="input", inputs=[], dim=n.dim,
-                             attrs={"name": n.attrs["name"]})
+                             layer=lay, attrs={"name": n.attrs["name"]})
         elif n.op == "output":
-            node = IR.IRNode(id=prog.fresh_id(), op="output",
+            node = IR.IRNode(id=prog.fresh_id(), op="output", layer=lay,
                              inputs=[_mapped_input(n.inputs[0])], dim=n.dim)
         elif n.op in ("matmul", "gemv", "bias_add"):
             w = tr.node(n.inputs[1])
-            node = IR.IRNode(id=prog.fresh_id(), op=n.op,
+            node = IR.IRNode(id=prog.fresh_id(), op=n.op, layer=lay,
                              inputs=[_mapped_input(n.inputs[0])], dim=n.dim,
                              attrs={"weight": w.attrs["name"], "wshape": w.attrs["shape"]})
         elif n.op == "bmm_edge":
             w = tr.node(n.inputs[1])
-            node = IR.IRNode(id=prog.fresh_id(), op="bmm_edge",
+            node = IR.IRNode(id=prog.fresh_id(), op="bmm_edge", layer=lay,
                              inputs=[_mapped_input(n.inputs[0]), _mapped_input(n.inputs[2])],
                              dim=n.dim,
                              attrs={"weight": w.attrs["name"], "wshape": w.attrs["shape"]})
         else:  # element-wise
-            node = IR.IRNode(id=prog.fresh_id(), op=n.op,
+            node = IR.IRNode(id=prog.fresh_id(), op=n.op, layer=lay,
                              inputs=[_mapped_input(i) for i in n.inputs], dim=n.dim,
                              attrs=dict(n.attrs))
         seg.add(node)
@@ -272,6 +274,11 @@ class CompiledGNN:
     _schedules: Dict[bool, object] = dataclasses.field(default_factory=dict,
                                                        repr=False)
 
+    @property
+    def n_layers(self) -> int:
+        """GNN layers in the lowered program (stacked models; 1 otherwise)."""
+        return self.trace.n_layers
+
     def schedule(self, kernel_dispatch: bool = True):
         """The :class:`~repro.core.schedule.ScheduledProgram` every engine
         interprets (cached per dispatch mode)."""
@@ -290,13 +297,18 @@ class CompiledGNN:
 
 
 def compile_gnn(tr: TR.GnnTrace, optimize: bool = True) -> CompiledGNN:
+    """Compile a (possibly multi-layer) whole-graph trace end to end: one
+    cross-layer CSE pass on the trace, one IR spanning every layer, one
+    SDE plan — engines interpret the whole stack in a single program."""
     from . import passes
 
     naive = construct_ir(tr)
     if optimize:
-        opt, report = passes.optimize(naive)
+        deduped, cse_removed = passes.cse_trace(tr)
+        opt, report = passes.optimize(construct_ir(deduped))
+        report["cse_removed"] = cse_removed
     else:
-        opt, report = naive, {"e2v_moved": 0, "dce_removed": 0}
+        opt, report = naive, {"e2v_moved": 0, "dce_removed": 0, "cse_removed": 0}
     plan = plan_sde(opt)
     return CompiledGNN(name=tr.name, trace=tr, naive_ir=naive, ir=opt, plan=plan,
                        opt_report=report)

@@ -84,6 +84,8 @@ class IRNode:
     dim: int = 0
     #: cross-segment communication channel id (send/recv only)
     comm_id: Optional[int] = None
+    #: GNN layer that emitted this op (stacked models; 0 for single-layer)
+    layer: int = 0
 
     def is_send(self) -> bool:
         return self.op in SEND_OPS

@@ -116,9 +116,16 @@ class SDEFunctions:
     edge_feat_dim: int  # per-edge input feature width (etype / efeat)
     out_dim: int        # stored output width per destination vertex
     max_level: int
+    #: level -> GNN layer whose tile work runs at that level (stacked models;
+    #: the stream scheduler uses this to pipeline across layer boundaries)
+    level_layer: Dict[int, int] = dataclasses.field(default_factory=dict)
+    n_layers: int = 1
 
     def all_levels(self):
         return range(self.max_level + 1)
+
+    def layer_of(self, lvl: int) -> int:
+        return self.level_layer.get(lvl, 0)
 
 
 def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
@@ -184,4 +191,5 @@ def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
                         src_load_dim=sp.src_load_dim,
                         dst_load_dim=sp.dst_load_dim,
                         edge_feat_dim=sp.edge_feat_dim, out_dim=sp.out_dim,
-                        max_level=sp.max_level)
+                        max_level=sp.max_level,
+                        level_layer=sp.layer_of_level(), n_layers=sp.n_layers)

@@ -1,11 +1,21 @@
-"""IR-level optimization passes (paper §6.2).
+"""Optimization passes (paper §6.2).
 
+* Cross-layer CSE (trace level): value-number the whole-graph trace and
+  deduplicate ops that recompute an identical value — in stacked models the
+  structure-only work (the shared ``dnorm`` scaling, the re-scattered
+  unchanged normalized adjacency between GCN layers) repeats per layer and
+  collapses to one copy.  Running before GOP defusion means the duplicate
+  send/recv channels are never even built.
 * E2V (edge-to-vertex): hoist edge-segment ops whose inputs are pure
   source- (or pure destination-) functions into the corresponding vertex
   segment, before the scatter.  Eliminates per-edge redundant compute —
   an op on E edges becomes an op on (at most) V vertices.
 * DCE: global dead-code elimination across segments/channels (cleans up the
   orphaned send/recv pairs E2V leaves behind).
+
+E2V and DCE operate on the whole IR program — segments of every layer at
+once — so for multi-layer lowerings they hoist and sweep across layer
+boundaries for free.
 """
 from __future__ import annotations
 
@@ -13,8 +23,56 @@ import copy
 from typing import Dict, List, Set, Tuple
 
 from . import ir as IR
+from . import trace as TR
 
 _SCATTER_RECVS = ("recvSrc", "recvDst")
+
+
+def cse_trace(tr: TR.GnnTrace) -> Tuple[TR.GnnTrace, int]:
+    """Cross-layer common-subexpression elimination on the whole-graph trace.
+
+    Two nodes are equal when op, space, (remapped) inputs, dim, and attrs all
+    match — every traced op (GOPs included) is a pure function of its inputs
+    and the symbolic graph, so the later copy can reuse the earlier value.
+    Inputs/params are keyed by name; ``output`` indicators are never merged.
+    A merged node keeps the *earliest* emitter's layer tag, so deduplicated
+    structure-only work is scheduled with the first layer that needs it.
+
+    Returns ``(deduplicated trace, number of nodes removed)``.
+    """
+    new = TR.GnnTrace(name=tr.name)
+    new.params = dict(tr.params)
+    remap: Dict[int, int] = {}
+    seen: Dict[tuple, int] = {}
+    removed = 0
+    for n in tr.nodes:
+        inputs = tuple(remap[i] for i in n.inputs)
+        if n.op == "output":
+            key = None                       # keep declaration order/arity
+        elif n.op in ("input", "param"):
+            key = (n.op, n.space, n.attrs["name"])
+        else:
+            key = (n.op, n.space, inputs, n.dim,
+                   tuple(sorted((k, repr(v)) for k, v in n.attrs.items())))
+        if key is not None and key in seen:
+            remap[n.id] = seen[key]
+            removed += 1
+            continue
+        nid = len(new.nodes)
+        new.nodes.append(TR.TNode(id=nid, op=n.op, space=n.space,
+                                  inputs=list(inputs), attrs=dict(n.attrs),
+                                  dim=n.dim))
+        new.layer_of[nid] = tr.layer_of.get(n.id, 0)
+        remap[n.id] = nid
+        if key is not None:
+            seen[key] = nid
+    dedup_inputs: List[int] = []
+    for i in tr.inputs:
+        if remap[i] not in dedup_inputs:
+            dedup_inputs.append(remap[i])
+    new.inputs = dedup_inputs
+    new.outputs = [remap[o] for o in tr.outputs]
+    return new, removed
 
 
 def _seg_index(prog: IR.IRProgram, seg: IR.Segment) -> int:
@@ -93,15 +151,16 @@ def e2v(prog: IR.IRProgram) -> int:
                 hoisted = IR.IRNode(
                     id=prog.fresh_id(), op=n.op,
                     inputs=[s.inputs[0] for s in sends],
-                    dim=n.dim, attrs=dict(n.attrs))
+                    dim=n.dim, attrs=dict(n.attrs), layer=n.layer)
                 vseg.add(hoisted)
                 # fresh scatter channel for the computed value
                 cid = prog.fresh_comm()
                 new_send = IR.IRNode(id=prog.fresh_id(), op=sends[0].op,
-                                     inputs=[hoisted.id], dim=n.dim, comm_id=cid)
+                                     inputs=[hoisted.id], dim=n.dim, comm_id=cid,
+                                     layer=n.layer)
                 vseg.add(new_send)
                 new_recv = IR.IRNode(id=prog.fresh_id(), op=ins[0].op, inputs=[],
-                                     dim=n.dim, comm_id=cid)
+                                     dim=n.dim, comm_id=cid, layer=n.layer)
                 eseg.add(new_recv)
                 for c in _consumers(eseg, n.id):
                     c.inputs = [new_recv.id if i == n.id else i for i in c.inputs]

@@ -202,14 +202,48 @@ class PipelinedRunner:
         estore: Dict[int, Array] = {nid: inputs[name]
                                     for nid, name in sp.edge_inputs}
 
-        def eval_vertex(rows, nodes):
-            """rows: indices (per-tile (S,) / batched (T,S) / padded (P,Dmax))."""
+        # ---- gather-drain fusion across phase/layer boundaries -------------
+        # A gather result lands in padded (P, Dmax, F) partition layout.  The
+        # next phase's dst block reads it in exactly that layout, so keeping
+        # it in ``pstore`` skips the unpad-scatter + re-gather round trip (the
+        # "full barrier" between a layer's gather drain and the next layer's
+        # destination compute).  Only values the tile-side paths read — src
+        # recompute, edge recvSrc/recvDst, kernel X operands, outputs — are
+        # published to the flat (V, F) vertex store.
+        tile_side_reads = set(sp.outputs)
+        tile_side_reads.update(sp.scatter_value_of.values())
+        for ph in sp.phases:
+            for n in ph.src.nodes:
+                tile_side_reads.update(n.inputs)
+            for gb in ph.gathers:
+                if gb.src_value_id is not None:
+                    tile_side_reads.add(gb.src_value_id)
+        pstore: Dict[int, Array] = {}
+
+        def publish_gather(recv_id, padded_val):
+            pstore[recv_id] = padded_val
+            if recv_id in tile_side_reads:
+                vstore[recv_id] = unpad(padded_val)
+
+        def eval_vertex(rows, nodes, padded=False):
+            """rows: indices (per-tile (S,) / batched (T,S) / padded (P,Dmax));
+            ``padded=True`` (dst blocks) short-circuits gather results still
+            sitting in partition layout."""
             env: Dict[int, Array] = {}
 
             def lookup(nid):
-                return env[nid] if nid in env else vstore[nid][rows]
+                if nid in env:
+                    return env[nid]
+                if padded and nid in pstore:
+                    return pstore[nid]
+                return vstore[nid][rows]
 
             for n in nodes:
+                if n.id not in env and n.id in vstore:
+                    # value already drained by an earlier dst block (layer
+                    # boundary): the source replica reads the stored rows
+                    # instead of recomputing the previous layer per tile
+                    continue
                 if n.op == "output":
                     env[n.id] = lookup(n.inputs[0])
                 else:
@@ -258,9 +292,11 @@ class PipelinedRunner:
             return buf[:V]
 
         for phase in sp.phases:
-            # ---- destination block (vectorized over partitions)
+            # ---- destination block (vectorized over partitions; gather
+            # results of the previous phase are consumed directly in padded
+            # layout — the drain of layer l fuses into layer l+1's dst work)
             if phase.dst.store_ids:
-                denv = eval_vertex(safe_pad_ids, phase.dst.nodes)
+                denv = eval_vertex(safe_pad_ids, phase.dst.nodes, padded=True)
                 for nid in phase.dst.store_ids:
                     vstore[nid] = unpad(denv[nid])
             if not phase.has_tile_work:
@@ -296,7 +332,7 @@ class PipelinedRunner:
                     out = self.softmax_kernel(scores, vals, ta0["part_id"],
                                               kc0["flags"], n_parts=P)
                     out = jnp.where(kc0["pmask"][:, None, None] > 0, out, 0.0)
-                    vstore[g.acc.recv_id] = unpad(out)
+                    publish_gather(g.acc.recv_id, out)
                     continue
 
                 # SpMM variants: one densified kernel call per size bucket,
@@ -325,7 +361,7 @@ class PipelinedRunner:
                     # written by the kernel (uninitialized, may be NaN)
                     total = total + jnp.where(kc["pmask"][:, None, None] > 0,
                                               out, 0.0)
-                vstore[g.acc.recv_id] = unpad(total)
+                publish_gather(g.acc.recv_id, total)
 
             # ---- the pipelined tile loop, one scan per bucket
             if scan_gathers:
@@ -357,7 +393,8 @@ class PipelinedRunner:
                 for ta in tas:
                     acc, _ = jax.lax.scan(body, acc, with_dst(ta))
 
-                # ---- publish scan-gather results (padded (P,Dmax) -> (V,))
+                # ---- publish scan-gather results (padded layout; flat (V,)
+                # store only when a tile-side path reads them)
                 for g in scan_gathers:
                     cid = g.acc.comm_id
                     if g.acc.kind == "sum":
@@ -366,7 +403,7 @@ class PipelinedRunner:
                         val = acc[f"sum{cid}"] / jnp.maximum(acc[f"cnt{cid}"], 1.0)
                     else:
                         val = acc[f"max{cid}"]
-                    vstore[g.acc.recv_id] = unpad(val)
+                    publish_gather(g.acc.recv_id, val)
 
         return [vstore[o] for o in sp.outputs]
 

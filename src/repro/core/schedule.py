@@ -31,6 +31,11 @@ Blocks per phase:
 
 The lowering is graph-independent (pure compile-time); engines bind it to a
 tile set at run time.
+
+Multi-layer programs lower exactly the same way: one :class:`SDEPlan` spans
+every stacked layer, each :class:`Phase` carries the ``layer`` whose tile
+work it runs, and the stream scheduler / simulator use those tags to
+software-pipeline across layer boundaries (``inter_layer="pipelined"``).
 """
 from __future__ import annotations
 
@@ -122,6 +127,10 @@ class Phase:
     edge: EdgeBlock
     gathers: List[GatherBlock]
     dst: DstBlock
+    #: GNN layer whose tile work this phase carries (stacked models).  A
+    #: boundary phase drains layer ``layer-1``'s gather in its dst block
+    #: while running layer ``layer``'s src/edge/gather tile work.
+    layer: int = 0
 
     @property
     def has_tile_work(self) -> bool:
@@ -153,10 +162,16 @@ class ScheduledProgram:
     dst_load_dim: int = 0
     edge_feat_dim: int = 0
     out_dim: int = 0
+    #: GNN layers spanned by this program (stacked models; 1 otherwise)
+    n_layers: int = 1
 
     @property
     def max_level(self) -> int:
         return self.phases[-1].level if self.phases else 0
+
+    def layer_of_level(self) -> Dict[int, int]:
+        """level -> GNN layer whose tile work runs at that level."""
+        return {p.level: p.layer for p in self.phases}
 
     def kernels_by_level(self) -> Dict[int, List[str]]:
         return {p.level: [g.kernel for g in p.gathers] for p in self.phases
@@ -188,8 +203,8 @@ class ScheduledProgram:
                                        for k, v in n.attrs.items())))
                          for n in nodes)
 
-        sig = ("sched", self.prog.name, self.kernel_dispatch,
-               tuple((p.level, tuple(g.kernel for g in p.gathers),
+        sig = ("sched", self.prog.name, self.kernel_dispatch, self.n_layers,
+               tuple((p.level, p.layer, tuple(g.kernel for g in p.gathers),
                       block(p.src.fresh), block(p.edge.fresh),
                       block(p.dst.fresh))
                      for p in self.phases),
@@ -425,6 +440,7 @@ def lower(plan: SDEPlan, kernel_dispatch: bool = True) -> ScheduledProgram:
         return n.op not in ("input",) and not n.is_send() and not n.is_recv()
 
     phases: List[Phase] = []
+    cur_layer = 0   # phase layer tags are monotone across levels
     for lvl in range(plan.max_level + 1):
         # ---- source block ---------------------------------------------------
         src_nodes = [n for n in vnodes
@@ -494,12 +510,16 @@ def lower(plan: SDEPlan, kernel_dispatch: bool = True) -> ScheduledProgram:
                       and n.id not in motif_covered
                       and n.id not in kernel_covered]
 
+        cur_layer = max([cur_layer]
+                        + [n.layer for n in src_fresh + dst_fresh + edge_fresh]
+                        + [nodes[g.acc.send_id].layer for g in gathers])
         phases.append(Phase(
             level=lvl,
             src=SrcBlock(nodes=src_nodes, fresh=src_fresh),
             edge=EdgeBlock(nodes=edge_nodes, fresh=edge_fresh),
             gathers=gathers,
             dst=DstBlock(nodes=dst_nodes, fresh=dst_fresh, store_ids=store_ids),
+            layer=cur_layer,
         ))
 
     scatter_value_of = {
@@ -526,4 +546,5 @@ def lower(plan: SDEPlan, kernel_dispatch: bool = True) -> ScheduledProgram:
         vertex_inputs=vertex_inputs, edge_inputs=edge_inputs,
         kernel_dispatch=kernel_dispatch,
         src_load_dim=src_load_dim, dst_load_dim=dst_load_dim,
-        edge_feat_dim=edge_feat_dim, out_dim=out_dim)
+        edge_feat_dim=edge_feat_dim, out_dim=out_dim,
+        n_layers=max((n.layer for n in nodes.values()), default=0) + 1)

@@ -189,12 +189,17 @@ def simulate(tasks: List[Task], stats: Dict[str, int], hw: HWConfig) -> SimResul
 
 def simulate_model(sde: SDEFunctions, tiles: TileSet,
                    hw: Optional[HWConfig] = None,
-                   padded: bool = False) -> SimResult:
+                   padded: bool = False,
+                   inter_layer: str = "barrier") -> SimResult:
     """``tiles`` may be a TileSet or BucketedTileSet; ``padded=True`` costs
     each tile at its batch's padded shape (see ``streams.build_task_graph``),
-    so bucketed batching's reduced padding shows up as fewer cycles."""
+    so bucketed batching's reduced padding shows up as fewer cycles.
+    ``inter_layer="pipelined"`` relaxes layer-boundary barriers to their true
+    data dependencies (multi-layer programs), modeling the same overlap the
+    fused multi-layer schedule exploits."""
     hw = hw or HWConfig()
-    tasks, stats = build_task_graph(sde, tiles, hw, padded=padded)
+    tasks, stats = build_task_graph(sde, tiles, hw, padded=padded,
+                                    inter_layer=inter_layer)
     return simulate(tasks, stats, hw)
 
 

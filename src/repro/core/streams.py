@@ -8,6 +8,15 @@ tiles concurrently.  Dependencies reproduce the SIGNAL/WAIT protocol:
     dStream(p).pre  --SIGNAL-->  sStream(tile)  --SIGNAL.E-->  eStream(tile)
     all eStream(tiles of p)  --(gather barrier)-->  dStream(p).post
 
+For multi-layer programs the default (``inter_layer="barrier"``) chains
+every level after ALL of the previous level's barriers — the classic
+layer-by-layer execution.  ``inter_layer="pipelined"`` relaxes the layer
+boundary to its true data dependencies: a layer-``l+1`` tile's sStream task
+waits only on the layer-``l`` gather barriers of the partitions that
+*produce its source vertices*, so early partitions' next-layer tile compute
+interleaves with late partitions' gather drain (the paper's tile × operator
+parallelism applied across the whole stacked program).
+
 The event-driven engine that executes this graph against hardware resources
 lives in :mod:`repro.core.simulator`.
 """
@@ -17,8 +26,10 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .isa import Instr, SDEFunctions, DISPATCH_CYCLES
-from .tiling import TileSet
+from .tiling import BucketedTileSet, TileSet
 
 
 @dataclasses.dataclass
@@ -96,8 +107,25 @@ def instr_cycles(ins: Instr, m: int, hw: HWConfig) -> int:
     return DISPATCH_CYCLES
 
 
+def _source_partitions(tiles) -> List[np.ndarray]:
+    """Per tile (flattened order), the destination partitions covering its
+    source vertices — the partitions whose previous-layer gather results the
+    tile's source compute reads."""
+    def one(ts: TileSet) -> List[np.ndarray]:
+        out = []
+        for t in range(ts.n_tiles):
+            ids = ts.src_ids[t, :int(ts.n_src[t])]
+            out.append(np.unique(
+                np.searchsorted(ts.part_start, ids, side="right") - 1))
+        return out
+    if isinstance(tiles, BucketedTileSet):
+        return [ps for b in tiles.buckets for ps in one(b)]
+    return one(tiles)
+
+
 def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
-                     padded: bool = False) -> Tuple[List[Task], Dict[str, int]]:
+                     padded: bool = False, inter_layer: str = "barrier"
+                     ) -> Tuple[List[Task], Dict[str, int]]:
     """Lower (SDE functions × tile set) into the stream task DAG.
 
     ``tiles`` may be a :class:`TileSet` or a
@@ -106,7 +134,23 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
     padded (S_max, E_max) instead of its true (n_src, n_edge) — the cost the
     static-shape ``lax.scan`` executor actually pays, which is what makes
     global padding vs size-bucketed batches comparable in the simulator.
+
+    ``inter_layer`` controls multi-layer scheduling: ``"barrier"`` (default)
+    chains each level globally after every barrier of the previous one;
+    ``"pipelined"`` relaxes *layer-boundary* levels to per-partition data
+    dependencies — a next-layer sStream task waits only on (a) its own
+    partition's dStream-pre task (accumulator handoff) and (b) the dStream
+    drain tasks of the partitions producing its source vertices, matching
+    the executed :class:`~repro.core.pipeline.PipelinedRunner` dataflow
+    (source replicas read *drained* previous-layer values, so the drain
+    compute of the producing partitions is a true dependency; each drain in
+    turn waits only on its own partition's gather barrier).  Within a layer
+    the strict chain is kept, so the two modes isolate exactly the
+    inter-layer overlap.
     """
+    if inter_layer not in ("barrier", "pipelined"):
+        raise ValueError(f"unknown inter_layer mode {inter_layer!r}")
+    pipelined = inter_layer == "pipelined"
     tasks: List[Task] = []
     stats = {"offchip_read": 0, "offchip_write": 0, "macs": 0, "elw_ops": 0}
     by = hw.dtype_bytes
@@ -122,31 +166,38 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
                 stats["elw_ops"] += m * max(n, 1)
         return out
 
+    src_parts = _source_partitions(tiles) if pipelined else None
     tid = 0
     prev_d: Optional[int] = None
+    bar_prev: Dict[int, int] = {}   # partition -> its last d-task of lvl-1
     for lvl in sde.all_levels():
         s_t, e_t, d_t = sde.s.get(lvl, []), sde.e.get(lvl, []), sde.d.get(lvl, [])
         has_tile_work = bool(s_t or e_t)
-        for p in range(tiles.n_dst_parts):
+        boundary = (pipelined and lvl > 0
+                    and sde.layer_of(lvl) != sde.layer_of(lvl - 1))
+        bar_cur: Dict[int, int] = {}
+        d_pres: Dict[int, Task] = {}
+
+        def emit_tiles(p: int):
+            """s/e tasks + gather barrier for partition ``p`` at ``lvl``."""
+            nonlocal tid, prev_d
+            d_pre = d_pres[p]
             n_dst = int(tiles.part_size[p])
-            # dStream "pre" part for this (level, partition)
-            d_pre = Task(tid, "d", _bind(d_t, 0, 0, n_dst),
-                         deps=[prev_d] if prev_d is not None else [],
-                         bytes_in=n_dst * sde.dst_load_dim * by,
-                         label=f"d[{lvl}].{p}")
-            tasks.append(d_pre); tid += 1
-            prev_d = d_pre.tid
-            if not has_tile_work:
-                continue
-            tile_ids = tiles.tiles_of_partition(p)
             e_tasks: List[int] = []
-            for t in tile_ids:
+            for t in tiles.tiles_of_partition(p):
                 ns, ne = int(tiles.n_src[t]), int(tiles.n_edge[t])
                 if ne == 0 and tiles.sparse:
                     continue
                 if padded:
                     ns, ne = tiles.padded_dims_of_tile(t)
-                st = Task(tid, "s", _bind(s_t, ns, ne, n_dst), deps=[d_pre.tid],
+                sdeps = [d_pre.tid]
+                if boundary:
+                    # source replicas read the DRAINED previous-layer values,
+                    # so the producing partitions' drain tasks are the true
+                    # dependency (each drain waits only on its own barrier)
+                    sdeps += [d_pres[int(ps)].tid for ps in src_parts[t]
+                              if int(ps) in d_pres and int(ps) != p]
+                st = Task(tid, "s", _bind(s_t, ns, ne, n_dst), deps=sdeps,
                           bytes_in=ns * sde.src_load_dim * by,
                           label=f"s[{lvl}].{p}.{t}")
                 tasks.append(st); tid += 1
@@ -162,6 +213,32 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
                            label=f"dbar[{lvl}].{p}")
             tasks.append(barrier); tid += 1
             prev_d = barrier.tid
+            bar_cur[p] = barrier.tid
+
+        # dStream "pre" part per (level, partition).  At a pipelined layer
+        # boundary every partition's drain is created first (dep: only its
+        # own previous barrier) so tile tasks can reference the drains of
+        # the partitions producing their source values; otherwise tile tasks
+        # interleave with the strict dStream chain as before.
+        for p in range(tiles.n_dst_parts):
+            n_dst = int(tiles.part_size[p])
+            if boundary:
+                deps = [bar_prev[p]] if p in bar_prev else []
+            else:
+                deps = [prev_d] if prev_d is not None else []
+            d_pre = Task(tid, "d", _bind(d_t, 0, 0, n_dst), deps=deps,
+                         bytes_in=n_dst * sde.dst_load_dim * by,
+                         label=f"d[{lvl}].{p}")
+            tasks.append(d_pre); tid += 1
+            prev_d = d_pre.tid
+            bar_cur[p] = d_pre.tid
+            d_pres[p] = d_pre
+            if not boundary and has_tile_work:
+                emit_tiles(p)
+        if boundary and has_tile_work:
+            for p in range(tiles.n_dst_parts):
+                emit_tiles(p)
+        bar_prev = bar_cur
 
     for t in tasks:
         stats["offchip_read"] += t.bytes_in

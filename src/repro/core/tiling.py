@@ -379,6 +379,39 @@ def pad_tileset(tiles: TileSet, n_tiles: int, s_max: int, e_max: int) -> TileSet
         sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges)
 
 
+def build_tiles(graph: Graph, n_dst_parts: int, n_src_parts: int, *,
+                sparse: bool = True, pad_multiple: int = 8,
+                reorder: Optional[str] = None, n_buckets: Optional[int] = None):
+    """One-stop tiling entry: optional degree reordering + grid tiling
+    (+ size bucketing).
+
+    ``reorder`` opts into the paper's §5.3 Degree Sorting before tiling:
+    ``"degree"``/``"in"`` sort by in-degree, ``"out"`` by out-degree
+    (``None`` keeps vertex ids).  Concentrating high-degree vertices into the
+    low-id partitions shrinks the sparse tiles elsewhere, which also tightens
+    the padded (S_max, E_max) envelope the static-shape executors pay for.
+    ``n_buckets`` additionally post-bins tiles via :func:`bucket_tiles`.
+
+    Returns ``(tiles, reordering)`` — run with ``reordering.graph`` and
+    permute features in / outputs back through the
+    :class:`~repro.core.reorder.Reordering` (the identity mapping when
+    ``reorder=None``).
+    """
+    from . import reorder as R
+
+    if reorder is None:
+        ro = R.identity_order(graph)
+    elif reorder in ("degree", "in", "out"):
+        ro = R.degree_sort(graph, by="out" if reorder == "out" else "in")
+    else:
+        raise ValueError(f"unknown reorder mode {reorder!r}")
+    tiles = grid_tile(ro.graph, n_dst_parts, n_src_parts, sparse=sparse,
+                      pad_multiple=pad_multiple)
+    if n_buckets is not None:
+        tiles = bucket_tiles(tiles, n_buckets, pad_multiple=pad_multiple)
+    return tiles, ro
+
+
 def choose_grid(n_vertices: int, dim: int, vmem_budget_bytes: int = 8 << 20,
                 dtype_bytes: int = 4) -> Tuple[int, int]:
     """Pick (n_dst_parts, n_src_parts) so a tile's working set — one source

@@ -13,6 +13,13 @@ Tensor *spaces*:
     'P'  — parameter (shared weights)    (shape attrs['shape'])
 Only GOPs (scatter / gather) change the space of a tensor — this property is
 what lets the compiler split the program into vertex/edge segments.
+
+Multi-layer programs: ZIPPER's evaluation stacks layers (§8.1), so a trace
+may span several GNN layers.  :func:`trace_model` accepts either one build
+function or a *sequence of layer builders* ``fn(tr, g, x) -> TT`` — layer
+``l``'s output tensor becomes layer ``l+1``'s input — and every emitted node
+is tagged with the layer that produced it (``GnnTrace.layer_of``), which the
+compiler propagates through the IR into the scheduled phase program.
 """
 from __future__ import annotations
 
@@ -41,10 +48,21 @@ class GnnTrace:
         self.inputs: List[int] = []   # node ids of graph inputs (vertex/edge feats)
         self.outputs: List[int] = []  # node ids of model outputs
         self.params: Dict[str, Tuple[int, ...]] = {}  # name -> shape
+        self.layer_of: Dict[int, int] = {}  # node id -> GNN layer that emitted it
+        self._layer = 0
+
+    def begin_layer(self, layer: int) -> None:
+        """Tag subsequently emitted nodes as belonging to GNN layer ``layer``."""
+        self._layer = int(layer)
+
+    @property
+    def n_layers(self) -> int:
+        return max(self.layer_of.values(), default=0) + 1
 
     def emit(self, op: str, space: str, inputs: Sequence[int], dim: int, **attrs) -> "TT":
         node = TNode(id=len(self.nodes), op=op, space=space, inputs=list(inputs), attrs=dict(attrs), dim=dim)
         self.nodes.append(node)
+        self.layer_of[node.id] = self._layer
         return TT(self, node.id)
 
     def node(self, nid: int) -> TNode:
@@ -203,11 +221,32 @@ GOP_TRACE_OPS = ("scatter_src", "scatter_dst", "gather")
 
 
 def trace_model(build_fn, name: str = "gnn") -> GnnTrace:
-    """Run ``build_fn(trace, graph_ref)``, which declares inputs/params and
-    marks outputs, and return the completed trace."""
+    """Trace a whole-graph model and return the completed trace.
+
+    ``build_fn`` is either
+
+    * one function ``build_fn(trace, graph_ref)`` that declares inputs /
+      params and marks outputs itself (the classic single-layer form), or
+    * a *sequence of layer builders* ``fn(trace, graph_ref, x) -> TT``:
+      layer ``l`` receives layer ``l-1``'s output tensor as ``x`` (``None``
+      for the first layer, which declares the graph inputs), returns its own
+      output tensor, and the final layer's output is marked automatically.
+      Nodes are layer-tagged via :meth:`GnnTrace.begin_layer`.
+    """
     tr = GnnTrace(name=name)
     g = GraphRef(tr)
-    build_fn(tr, g)
+    if callable(build_fn):
+        build_fn(tr, g)
+    else:
+        if not build_fn:
+            raise ValueError("trace_model got an empty layer-builder sequence")
+        x: Optional[TT] = None
+        for layer, fn in enumerate(build_fn):
+            tr.begin_layer(layer)
+            x = fn(tr, g, x)
+            if x is None:
+                raise ValueError(f"layer builder {layer} returned no tensor")
+        tr.mark_output(x)  # output indicator stays tagged with the last layer
     if not tr.outputs:
         raise ValueError("model marked no outputs")
     return tr

@@ -54,10 +54,19 @@ class InferenceServer:
 
     def __init__(self, model: Union[str, C.CompiledGNN],
                  params: Optional[Dict[str, Array]] = None, *,
-                 kernel_dispatch: bool = True, cache_capacity: int = 32,
-                 target_part: int = 256, donate_inputs: Optional[bool] = None):
-        self.compiled = (C.compile_gnn(M.trace_named(model))
-                         if isinstance(model, str) else model)
+                 n_layers: int = 1, kernel_dispatch: bool = True,
+                 cache_capacity: int = 32, target_part: int = 256,
+                 donate_inputs: Optional[bool] = None):
+        if isinstance(model, str):
+            self.compiled = C.compile_gnn(
+                M.trace_named(model) if n_layers == 1
+                else M.trace_stacked(model, n_layers))
+        else:
+            if n_layers != 1 and n_layers != model.n_layers:
+                raise ValueError(
+                    f"n_layers={n_layers} conflicts with the pre-compiled "
+                    f"model's {model.n_layers} layers")
+            self.compiled = model
         self.params = params
         self.kernel_dispatch = kernel_dispatch
         self.target_part = target_part
@@ -103,6 +112,7 @@ class InferenceServer:
     def stats(self) -> Dict:
         return dict(requests=self._requests, graphs=self._graphs_served,
                     batches=self._batches_run, cache_size=len(self.cache),
+                    n_layers=self.compiled.n_layers,
                     cache=self.cache.stats.as_dict())
 
     @property
@@ -111,13 +121,27 @@ class InferenceServer:
         repeated-signature stream)."""
         return self.cache.stats.compiles
 
+    @property
+    def cache_hits(self) -> int:
+        """Request batches served by a warm compiled runner."""
+        return self.cache.stats.hits
+
+    @property
+    def cache_misses(self) -> int:
+        """Request batches that had to build (and compile) a runner."""
+        return self.cache.stats.misses
+
     # ------------------------------------------------------------ internals
     def _run_group(self, graphs: List[Graph],
                    inputs: List[Dict[str, Array]],
                    params: Dict[str, Array]) -> List[List[Array]]:
         batch = batch_graphs(graphs)
         V_real = batch.graph.n_vertices
-        class_key = (size_class(graphs[0]), quantize(len(graphs), floor=1))
+        # class keys carry the program identity (name + layer count): shape
+        # registrations of a 1-layer and a 2-layer program of the same model
+        # must never alias, even if two servers share a registry
+        class_key = (self.compiled.name, self.compiled.n_layers,
+                     size_class(graphs[0]), quantize(len(graphs), floor=1))
         merged_graph, tiles, E_pad = self.shapes.canonical(class_key,
                                                            batch.graph)
         V_pad = merged_graph.n_vertices

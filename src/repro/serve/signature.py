@@ -71,6 +71,11 @@ def _round_up(x: float, multiple: int) -> int:
 class ShapeRegistry:
     """Per-size-class canonical padded shapes, fixed at first sight.
 
+    Keys are caller-chosen; :class:`~repro.serve.engine.InferenceServer`
+    prefixes them with the compiled program's identity (model name + layer
+    count), so multi-layer and single-layer programs of one model never
+    alias a registration even when a registry is shared.
+
     The first request of a class registers padded dimensions with
     ``headroom`` (default 25%) over what it realized; every later request of
     the class pads onto exactly those shapes — a guaranteed program-cache

@@ -17,6 +17,19 @@ def test_bench_streams_smoke():
     assert {r[0] for r in rows} == {"gcn", "gat"}
 
 
+def test_bench_multilayer_smoke():
+    """Acceptance (ISSUE 4): on the cit-Patents-like config the pipelined
+    2-layer fused schedule simulates fewer cycles than the barrier schedule,
+    and stacked GCN's cross-layer CSE fires."""
+    from benchmarks import bench_multilayer
+
+    metrics = bench_multilayer.run(smoke=True)
+    assert set(metrics) == {"gcn", "gat"}
+    for name, m in metrics.items():
+        assert m["fused_pipelined_cycles"] < m["fused_barrier_cycles"], (name, m)
+    assert metrics["gcn"]["cse_removed"] >= 1
+
+
 def test_bench_serving_smoke():
     """Acceptance (ISSUE 3): batched serving >= 2x graphs/sec over the
     per-graph sequential baseline at batch 64, with a > 90% post-warmup

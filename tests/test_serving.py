@@ -268,3 +268,91 @@ def test_size_class_groups_similar_graphs():
     b = graphs.random_graph(55, 230, seed=1)
     big = graphs.random_graph(400, 2000, seed=2)
     assert size_class(a) == size_class(b) != size_class(big)
+
+
+# ---------------------------------------------------------------------------
+# multi-layer programs in the serving cache (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def test_program_cache_distinguishes_layer_counts():
+    """A 1-layer and a 2-layer GCN of the same dims must never share a
+    compiled runner: their structure signatures differ."""
+    tr1 = models.trace_named("gcn", 16, 16)
+    tr2 = models.trace_stacked("gcn", 2, 16, 16, 16)
+    c1, c2 = compiler.compile_gnn(tr1), compiler.compile_gnn(tr2)
+    assert c1.structure_signature() != c2.structure_signature()
+    g = graphs.random_graph(64, 256, seed=0)
+    vq = quantize(g.n_vertices)
+    ts = canonical_tiles(graphs.pad_graph(g, vq), serving_grid(vq))
+    assert structure_signature(c1, ts) != structure_signature(c2, ts)
+    cache = ProgramCache(capacity=4)
+    cache.get_or_build(structure_signature(c1, ts), lambda: "one-layer")
+    cache.get_or_build(structure_signature(c2, ts), lambda: "two-layer")
+    assert cache.stats.compiles == 2 and len(cache) == 2
+
+
+def test_multilayer_server_zero_recompiles_and_counters():
+    """Acceptance: repeated same-structure submissions of a 2-layer model
+    serve entirely from the warm runner — hit/miss/compile counters exposed
+    on the server stay at one compile."""
+    server = InferenceServer("gcn", n_layers=2, cache_capacity=8)
+    tr = server.compiled.trace
+    assert server.compiled.n_layers == 2
+    params = models.init_params(tr)
+    warm_g, warm_i = _stream(tr, "gcn", 4, seed0=0)
+    server.submit(warm_g, warm_i, params)
+    assert (server.cache_misses, server.compile_count) == (1, 1)
+    for req in range(1, 6):
+        gs, ins = _stream(tr, "gcn", 4, seed0=req * 40)
+        server.submit(gs, ins, params)
+    assert server.compile_count == 1, "multi-layer submissions recompiled"
+    assert server.cache_hits == 5 and server.cache_misses == 1
+    assert server.stats()["n_layers"] == 2
+    # and the batched results still match the per-graph stacked oracle
+    gs, ins = _stream(tr, "gcn", 3, seed0=777)
+    outs = server.submit(gs, ins, params)
+    for g, inp, out in zip(gs, ins, outs):
+        ref = executor.run_reference(tr, g, inp, params)
+        assert float(np.max(np.abs(np.asarray(ref[0]) - out[0]))) < TOL
+
+
+# ---------------------------------------------------------------------------
+# property: batch -> pad -> run -> unbatch round-trip (hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_batch_pad_run_unbatch_matches_per_graph_oracle():
+    """Random small multigraphs batched block-diagonally, tiled, padded with
+    filler tiles, run through the pipelined engine, and unbatched must match
+    every member's whole-graph oracle (small default profile, slow marker)."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need the optional hypothesis dep")
+    from hypothesis import given, settings, strategies as st
+
+    tr, c = _compiled("gcn", dim=8)
+    params = models.init_params(tr)
+
+    @given(sizes=st.lists(st.tuples(st.integers(4, 32), st.integers(0, 90)),
+                          min_size=2, max_size=4),
+           seed=st.integers(0, 100), kd=st.booleans())
+    @settings(max_examples=10, deadline=None)
+    def check(sizes, seed, kd):
+        gs = [graphs.random_graph(v, e, seed=seed + i, model="powerlaw")
+              for i, (v, e) in enumerate(sizes)]
+        ins = [models.init_inputs(tr, g, seed=seed + i)
+               for i, g in enumerate(gs)]
+        batch = graphs.batch_graphs(gs)
+        merged = {name: np.concatenate([np.asarray(i[name]) for i in ins])
+                  for name in ("x", "dnorm")}
+        ts = tiling.grid_tile(batch.graph, 3, 3, sparse=True)
+        pts = tiling.pad_tileset(ts, ts.n_tiles + 2, ts.s_max + 8,
+                                 ts.e_max + 8)
+        out = pipeline.run_pipelined(c, batch.graph, pts, merged, params,
+                                     kernel_dispatch=kd)
+        parts = batch.unbatch_vertex(np.asarray(out[0]))
+        for g, inp, got in zip(gs, ins, parts):
+            ref = np.asarray(executor.run_reference(tr, g, inp, params)[0])
+            assert got.shape == ref.shape
+            np.testing.assert_allclose(got, ref, atol=TOL, rtol=0)
+
+    check()
