@@ -37,7 +37,7 @@ import numpy as np
 from . import compiler as C
 from . import schedule as S
 from .executor import apply_compute, _NEG_INF
-from .tiling import BucketedTileSet, TileSet
+from .tiling import BucketedTileSet, ShardPlan, TileSet, plan_shards
 from ..gnn.graphs import Graph
 
 Array = Any
@@ -62,6 +62,55 @@ def _tile_arrays(ts: TileSet) -> Dict[str, Array]:
         n_src=jnp.asarray(ts.n_src), n_edge=jnp.asarray(ts.n_edge),
         part_id=jnp.asarray(ts.part_id), part_start=jnp.asarray(ts.part_start),
     )
+
+
+# ---- scan-gather accumulator semantics (shared by Pipelined/Sharded) -------
+# The masking, mean-count, and _NEG_INF-clamp rules below are the single
+# source of truth for the scan path; the two runners differ only in the
+# accumulator's partition-row count (global P vs device-local P_loc) and in
+# which per-tile id indexes it.
+
+def _init_gather_acc(scan_gathers, n_rows: int, dmax: int) -> Dict[str, Array]:
+    acc: Dict[str, Array] = {}
+    for g in scan_gathers:
+        cid, dim = g.acc.comm_id, g.acc.dim
+        if g.acc.kind in ("sum", "mean"):
+            acc[f"sum{cid}"] = jnp.zeros((n_rows, dmax, dim), jnp.float32)
+            if g.acc.kind == "mean":
+                acc[f"cnt{cid}"] = jnp.zeros((n_rows, dmax, 1), jnp.float32)
+        else:
+            acc[f"max{cid}"] = jnp.full((n_rows, dmax, dim), _NEG_INF,
+                                        jnp.float32)
+    return acc
+
+
+def _gather_accumulate(acc: Dict[str, Array], g, val: Array, emask: Array,
+                       edst: Array, pid: Array, dmax: int) -> None:
+    """Fold one tile's per-edge values into the gather accumulator row
+    ``pid`` (in place on the dict)."""
+    cid = g.acc.comm_id
+    if g.acc.kind in ("sum", "mean"):
+        contrib = jax.ops.segment_sum(
+            jnp.where(emask, val, 0.0), edst, num_segments=dmax)
+        acc[f"sum{cid}"] = acc[f"sum{cid}"].at[pid].add(contrib)
+        if g.acc.kind == "mean":
+            cnt = jax.ops.segment_sum(
+                jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
+            acc[f"cnt{cid}"] = acc[f"cnt{cid}"].at[pid].add(cnt[:, None])
+    else:
+        m = jax.ops.segment_max(
+            jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
+        acc[f"max{cid}"] = acc[f"max{cid}"].at[pid].max(
+            jnp.maximum(m, _NEG_INF))
+
+
+def _drain_gather_acc(acc: Dict[str, Array], g) -> Array:
+    cid = g.acc.comm_id
+    if g.acc.kind == "sum":
+        return acc[f"sum{cid}"]
+    if g.acc.kind == "mean":
+        return acc[f"sum{cid}"] / jnp.maximum(acc[f"cnt{cid}"], 1.0)
+    return acc[f"max{cid}"]
 
 
 class PipelinedRunner:
@@ -305,15 +354,7 @@ class PipelinedRunner:
             scan_gathers = phase.scan_gathers()
 
             # ---- accumulators (shared across all buckets of this phase)
-            acc: Dict[str, Array] = {}
-            for g in scan_gathers:
-                cid, dim = g.acc.comm_id, g.acc.dim
-                if g.acc.kind in ("sum", "mean"):
-                    acc[f"sum{cid}"] = jnp.zeros((P, dmax, dim), jnp.float32)
-                    if g.acc.kind == "mean":
-                        acc[f"cnt{cid}"] = jnp.zeros((P, dmax, 1), jnp.float32)
-                else:
-                    acc[f"max{cid}"] = jnp.full((P, dmax, dim), _NEG_INF, jnp.float32)
+            acc = _init_gather_acc(scan_gathers, P, dmax)
 
             # ---- kernel-dispatched gather blocks
             for g in phase.kernel_gathers():
@@ -373,21 +414,8 @@ class PipelinedRunner:
                     _, elookup = edge_env(phase.edge.nodes, xs, senv)
                     edst = xs["edge_dst"]
                     for g in scan_gathers:
-                        cid = g.acc.comm_id
-                        val = elookup(g.acc.value_id)
-                        if g.acc.kind in ("sum", "mean"):
-                            contrib = jax.ops.segment_sum(
-                                jnp.where(emask, val, 0.0), edst, num_segments=dmax)
-                            acc[f"sum{cid}"] = acc[f"sum{cid}"].at[pid].add(contrib)
-                            if g.acc.kind == "mean":
-                                cnt = jax.ops.segment_sum(
-                                    jnp.where(emask, 1.0, 0.0), edst, num_segments=dmax)
-                                acc[f"cnt{cid}"] = acc[f"cnt{cid}"].at[pid].add(cnt[:, None])
-                        else:
-                            m = jax.ops.segment_max(
-                                jnp.where(emask, val, _NEG_INF), edst, num_segments=dmax)
-                            m = jnp.maximum(m, _NEG_INF)
-                            acc[f"max{cid}"] = acc[f"max{cid}"].at[pid].max(m)
+                        _gather_accumulate(acc, g, elookup(g.acc.value_id),
+                                           emask, edst, pid, dmax)
                     return acc, 0
 
                 for ta in tas:
@@ -396,14 +424,7 @@ class PipelinedRunner:
                 # ---- publish scan-gather results (padded layout; flat (V,)
                 # store only when a tile-side path reads them)
                 for g in scan_gathers:
-                    cid = g.acc.comm_id
-                    if g.acc.kind == "sum":
-                        val = acc[f"sum{cid}"]
-                    elif g.acc.kind == "mean":
-                        val = acc[f"sum{cid}"] / jnp.maximum(acc[f"cnt{cid}"], 1.0)
-                    else:
-                        val = acc[f"max{cid}"]
-                    publish_gather(g.acc.recv_id, val)
+                    publish_gather(g.acc.recv_id, _drain_gather_acc(acc, g))
 
         return [vstore[o] for o in sp.outputs]
 
@@ -414,3 +435,420 @@ def run_pipelined(compiled: C.CompiledGNN, graph: Graph, tiles,
                   kernel_dispatch: Optional[bool] = None) -> List[Array]:
     return PipelinedRunner(compiled, graph, tiles, tile_kernel=tile_kernel,
                            kernel_dispatch=kernel_dispatch)(inputs, params)
+
+
+# ---------------------------------------------------------------------------
+# sharded execution: one ScheduledProgram data-parallel over dst partitions
+# ---------------------------------------------------------------------------
+
+def _quantize_cap(n: int) -> int:
+    """Round a per-shard tile capacity up to the next power of two (serving:
+    small per-request variance in shard tile counts must map onto one
+    compiled shape)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def _shard_tile_counts(tiles, plan: ShardPlan) -> List[List[int]]:
+    """Per bucket, per shard: number of real (n_edge > 0) tiles assigned."""
+    buckets: List[TileSet] = (list(tiles.buckets)
+                              if isinstance(tiles, BucketedTileSet) else [tiles])
+    out = []
+    for b in buckets:
+        shard = plan.shard_of_part[b.part_id]
+        real = b.n_edge > 0
+        out.append([int(np.sum(real & (shard == k)))
+                    for k in range(plan.n_shards)])
+    return out
+
+
+def shard_layout_signature(tiles, n_devices: int, mode: str = "cost",
+                           quantize_tile_cap: bool = False) -> Tuple:
+    """Shape identity of the sharded execution layout — everything a
+    :class:`ShardedRunner` compilation depends on beyond the program and
+    tile-set signatures.  Cheap (pure numpy); the serving engine calls it
+    per request to key the program cache, so two requests share a warm
+    sharded runner iff their shard layouts realize identical shapes."""
+    plan = plan_shards(tiles, n_devices, mode=mode)
+    caps = []
+    for counts in _shard_tile_counts(tiles, plan):
+        cap = max(1, max(counts))
+        caps.append(_quantize_cap(cap) if quantize_tile_cap else cap)
+    return ("shardlayout", n_devices, mode, plan.n_local_parts, tuple(caps))
+
+
+def _shard_partition_ids(plan: ShardPlan, part_start: np.ndarray,
+                         part_size: np.ndarray, dmax: int,
+                         n_vertices: int) -> np.ndarray:
+    """(K, P_loc, Dmax) global vertex id per (shard, local slot, offset);
+    invalid slots carry the sentinel ``n_vertices``."""
+    K, P_loc = plan.n_shards, plan.n_local_parts
+    ids = np.full((K, P_loc, dmax), n_vertices, np.int32)
+    for k, parts in enumerate(plan.parts_of_shard):
+        for j, p in enumerate(parts):
+            n = int(part_size[p])
+            ids[k, j, :n] = int(part_start[p]) + np.arange(n, dtype=np.int32)
+    return ids
+
+
+def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool
+                  ) -> Tuple[Dict, Dict, Tuple]:
+    """Build the per-device operand arrays for a sharded run.
+
+    Returns ``(shard_ops, repl_ops, caps)``: ``shard_ops`` arrays carry a
+    leading mesh axis (row ``k`` = shard ``k``'s slice), ``repl_ops`` are
+    replicated tables.  Per bucket, each shard receives its partitions' real
+    tiles in the bucket's partition-major order (bucket order preserved) and
+    is padded to a common capacity with zero-edge filler rows the scan masks
+    out.  All shapes are a pure function of the tile-set signature, the plan
+    shape, and the caps — :meth:`ShardedRunner.bind` rebuilds them for any
+    structurally-identical tile set.
+    """
+    buckets: List[TileSet] = (list(tiles.buckets)
+                              if isinstance(tiles, BucketedTileSet) else [tiles])
+    K = plan.n_shards
+    dmax = int(tiles.part_size.max())
+    counts = _shard_tile_counts(tiles, plan)
+
+    bucket_ops = []
+    caps = []
+    for b, cnts in zip(buckets, counts):
+        cap = max(1, max(cnts))
+        if quantize_tile_cap:
+            cap = _quantize_cap(cap)
+        caps.append(cap)
+        shard = plan.shard_of_part[b.part_id]
+        sel_of = [np.nonzero((shard == k) & (b.n_edge > 0))[0]
+                  for k in range(K)]
+
+        def stack(a: np.ndarray, fill=0) -> np.ndarray:
+            out = np.full((K, cap) + a.shape[1:], fill, a.dtype)
+            for k, sel in enumerate(sel_of):
+                out[k, :len(sel)] = a[sel]
+            return out
+
+        bucket_ops.append(dict(
+            src_ids=stack(b.src_ids), edge_src=stack(b.edge_src),
+            edge_dst=stack(b.edge_dst), edge_gid=stack(b.edge_gid),
+            n_edge=stack(b.n_edge), part_id=stack(b.part_id),
+            local_pid=stack(plan.local_slot_of_part[b.part_id].astype(np.int32)),
+        ))
+
+    pad_ids = _shard_partition_ids(plan, tiles.part_start, tiles.part_size,
+                                   dmax, tiles.n_vertices)
+    shard_ops = {"pad_ids": pad_ids, "buckets": bucket_ops}
+    repl_ops = {"full_pad_ids": pad_ids.reshape(-1).copy()}
+    return shard_ops, repl_ops, tuple(caps)
+
+
+class ShardedRunner:
+    """Data-parallel execution of one :class:`~repro.core.schedule
+    .ScheduledProgram` over a 1-D device mesh of ``n_devices`` shards.
+
+    Each shard owns whole destination partitions (a :class:`~repro.core
+    .tiling.ShardPlan`), so every gather accumulator and every drained
+    partition-layout value stays device-local; the only cross-device
+    dataflow is the layer-boundary read of drained source values, exchanged
+    as ONE ``all_gather`` of the padded ``(P_loc, Dmax, F)`` layout per
+    boundary (values read back through destination replicas — GAT's softmax
+    ``recvDst`` statistics, for instance — never leave their device).
+
+    The program is lowered with ``kernel_dispatch=False`` (the pure
+    multi-phase scan schedule): Pallas kernel dispatch inside ``shard_map``
+    is future work, and the scan path is numerically identical to the
+    single-device scan engine.  On CPU, force a multi-device mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax import.
+
+    ``mode`` picks the partition assignment (``"cost"``: LPT-balanced padded
+    edge cost; ``"contiguous"``: even ranges — deterministic across requests,
+    what serving uses), ``quantize_tile_cap=True`` rounds per-shard tile
+    capacities to powers of two so structurally-similar requests share one
+    compiled shape.  Like :class:`PipelinedRunner`, compilation depends only
+    on :attr:`signature`; :meth:`bind`/:meth:`run_with` re-derive operands
+    for a different same-signature tile set through the warm compilation.
+    """
+
+    def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles,
+                 n_devices: Optional[int] = None, *, mode: str = "cost",
+                 quantize_tile_cap: bool = False,
+                 devices: Optional[List] = None):
+        devices = list(devices) if devices is not None else list(jax.devices())
+        if n_devices is None:
+            n_devices = len(devices)
+        if n_devices > len(devices):
+            raise ValueError(
+                f"n_devices={n_devices} but only {len(devices)} jax devices "
+                "are visible; on CPU set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N before importing jax")
+        self.c = compiled
+        self.sp: S.ScheduledProgram = compiled.schedule(False)
+        self.graph = graph
+        self.tiles = tiles
+        self.mode = mode
+        self.quantize_tile_cap = quantize_tile_cap
+        self.n_devices = n_devices
+        self.plan = plan_shards(tiles, n_devices, mode=mode)
+        self.dmax = int(tiles.part_size.max())
+        self._ops_np, self._repl_np, self.caps = _shard_layout(
+            tiles, self.plan, quantize_tile_cap)
+        self._publish = self._publish_ids()
+        self._signature = ("sharded", n_devices, mode, self.plan.n_local_parts,
+                           self.caps, self.sp.structure_signature(),
+                           tiles.shape_signature())
+        self.mesh = jax.sharding.Mesh(np.asarray(devices[:n_devices]),
+                                      ("shards",))
+        P = jax.sharding.PartitionSpec
+        from ..jax_compat import shard_map
+        self._jitted = jax.jit(shard_map(
+            self._run, mesh=self.mesh,
+            in_specs=(P(), P(), P("shards"), P()), out_specs=P(),
+            check_vma=False))
+        self._operands: Optional[Tuple] = None
+
+    # ------------------------------------------------------------- identity
+    @property
+    def signature(self) -> Tuple:
+        """(mesh, layout, program, tile-set) identity this compilation
+        serves — includes ``n_devices`` so a serving cache can never alias a
+        sharded program with a single-device one (or across mesh sizes)."""
+        return self._signature
+
+    def jit_cache_size(self) -> int:
+        try:
+            return int(self._jitted._cache_size())
+        except AttributeError:
+            return -1
+
+    def _publish_ids(self) -> set:
+        """Vertex node ids whose values must be exchanged into the
+        replicated flat store: tile-side source reads (and the outputs) of
+        values that are *gather-tainted* — transitively derived from a
+        gather result, i.e. carrying partition-owned aggregated state.
+
+        Untainted values (pure functions of replicated inputs, like GAT's
+        ``h = x @ W``) are recomputed by the source replicas per tile —
+        bitwise the same rows, no collective.  Values consumed only through
+        destination replicas (``recvDst``) or later dst blocks stay
+        device-local either way, so each layer boundary drains exactly one
+        all-gather."""
+        sp = self.sp
+        node_op: Dict[int, str] = {}
+        vnodes = []
+        for seg in sp.prog.segments:
+            for n in seg.nodes.values():
+                node_op[n.id] = n.op
+        for seg in sp.prog.vertex_segments():
+            vnodes.extend(seg.toposort())
+        tainted: set = set()
+        for n in vnodes:
+            if n.op == "recvInEdge" or any(i in tainted for i in n.inputs):
+                tainted.add(n.id)
+
+        reads = set(sp.outputs)
+        for ph in sp.phases:
+            for n in ph.src.nodes:
+                reads.update(n.inputs)
+            for g in ph.gathers:
+                if g.src_value_id is not None:
+                    reads.add(g.src_value_id)
+        for rnid, vnid in sp.scatter_value_of.items():
+            if node_op.get(rnid) == "recvSrc":
+                reads.add(vnid)
+        pub = (reads & tainted) | set(sp.outputs)
+        return pub - {nid for nid, _ in sp.vertex_inputs}
+
+    # ------------------------------------------------------------------ bind
+    def bind(self, tiles) -> Tuple:
+        """Device operands for a tile set structurally identical to the
+        construction one (same tile-set signature AND same realized shard
+        layout shapes) — the per-request rebind step of the serving cache."""
+        if tiles.shape_signature() != self.tiles.shape_signature():
+            raise ValueError(
+                "tile set is not structurally identical to this runner's: "
+                f"{tiles.shape_signature()} != {self.tiles.shape_signature()}")
+        plan = plan_shards(tiles, self.n_devices, mode=self.mode)
+        if plan.n_local_parts != self.plan.n_local_parts:
+            raise ValueError(
+                f"shard layout mismatch: {plan.n_local_parts} local "
+                f"partition slots != {self.plan.n_local_parts}")
+        ops, repl, caps = _shard_layout(tiles, plan, self.quantize_tile_cap)
+        if caps != self.caps:
+            raise ValueError(
+                f"shard tile capacities changed: {caps} != {self.caps}")
+        return (jax.tree_util.tree_map(jnp.asarray, ops),
+                jax.tree_util.tree_map(jnp.asarray, repl))
+
+    def _get_operands(self) -> Tuple:
+        if self._operands is None:
+            self._operands = (
+                jax.tree_util.tree_map(jnp.asarray, self._ops_np),
+                jax.tree_util.tree_map(jnp.asarray, self._repl_np))
+        return self._operands
+
+    # ------------------------------------------------------------------ run
+    def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array],
+                 operands: Optional[Tuple] = None) -> List[Array]:
+        ops, repl = operands if operands is not None else self._get_operands()
+        return self._jitted({k: jnp.asarray(v) for k, v in inputs.items()},
+                            {k: jnp.asarray(v) for k, v in params.items()},
+                            ops, repl)
+
+    def run_with(self, tiles, inputs: Dict[str, Array],
+                 params: Dict[str, Array]) -> List[Array]:
+        """Execute a different same-signature tile set through the warm
+        compilation (no retrace: operand shapes identical by contract)."""
+        return self(inputs, params, operands=self.bind(tiles))
+
+    def lower_text(self, inputs: Dict[str, Array],
+                   params: Dict[str, Array]) -> str:
+        """Compiled HLO text (collective-census hook for tests/benchmarks)."""
+        ops, repl = self._get_operands()
+        lowered = self._jitted.lower(
+            {k: jnp.asarray(v) for k, v in inputs.items()},
+            {k: jnp.asarray(v) for k, v in params.items()}, ops, repl)
+        return lowered.compile().as_text()
+
+    # ---------------------------------------------------------- trace-time
+    def _run(self, inputs, params, ops, repl) -> List[Array]:
+        sp = self.sp
+        V = self.graph.n_vertices
+        K, P_loc, dmax = self.n_devices, self.plan.n_local_parts, self.dmax
+        pad_ids = ops["pad_ids"][0]                       # (P_loc, Dmax)
+        pad_valid = (pad_ids < V)[..., None]
+        safe_pad_ids = jnp.minimum(pad_ids, V - 1)
+        full_ids = repl["full_pad_ids"]                   # (K*P_loc*Dmax,)
+        part_start = jnp.asarray(self.tiles.part_start)   # (P,) by contract
+
+        vstore: Dict[int, Array] = {nid: inputs[name]
+                                    for nid, name in sp.vertex_inputs}
+        estore: Dict[int, Array] = {nid: inputs[name]
+                                    for nid, name in sp.edge_inputs}
+        # device-local padded (P_loc, Dmax, F) stores: gather results and
+        # dst-computed values (the drain pstore of the pipelined runner,
+        # kept per shard)
+        pstore: Dict[int, Array] = {}
+        dstore: Dict[int, Array] = {}
+
+        def publish(pending: Dict[int, Array]) -> None:
+            """Exchange device-local padded values into the replicated flat
+            (V, F) store: ONE all-gather for everything this phase drains."""
+            if not pending:
+                return
+            ids = list(pending)
+            widths = [int(pending[i].shape[-1]) for i in ids]
+            buf = jnp.concatenate([pending[i] for i in ids], axis=-1)
+            buf = jnp.where(pad_valid, buf, 0.0)
+            full = jax.lax.all_gather(buf, "shards", axis=0)  # (K,P_loc,Dmax,F)
+            flat = full.reshape(K * P_loc * dmax, -1)
+            store = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
+            store = store.at[full_ids].set(flat)[:V]
+            off = 0
+            for nid, w in zip(ids, widths):
+                vstore[nid] = store[:, off:off + w]
+                off += w
+
+        def eval_vertex(rows, nodes, padded=False):
+            env: Dict[int, Array] = {}
+
+            def lookup(nid):
+                if nid in env:
+                    return env[nid]
+                if padded:
+                    if nid in pstore:
+                        return pstore[nid]
+                    if nid in dstore:
+                        return dstore[nid]
+                return vstore[nid][rows]
+
+            for n in nodes:
+                if n.id not in env and (n.id in vstore
+                                        or (padded and n.id in dstore)):
+                    continue        # drained earlier: read the stored value
+                if n.op == "output":
+                    env[n.id] = lookup(n.inputs[0])
+                else:
+                    env[n.id] = apply_compute(n.op, n.attrs, params,
+                                              [lookup(i) for i in n.inputs])
+            return env
+
+        def edge_env(nodes, xs, senv):
+            eenv: Dict[int, Array] = {}
+
+            def elookup(nid):
+                return eenv[nid] if nid in eenv else estore[nid][xs["edge_gid"]]
+
+            for n in nodes:
+                if n.op == "recvSrc":
+                    src_nid = sp.scatter_value_of[n.id]
+                    base = (senv[src_nid] if src_nid in senv
+                            else vstore[src_nid][xs["src_ids"]])
+                    eenv[n.id] = base[xs["edge_src"]]
+                elif n.op == "recvDst":
+                    src_nid = sp.scatter_value_of[n.id]
+                    # destination replicas read their OWN partition's rows:
+                    # device-local padded layout, no exchange
+                    if src_nid in pstore:
+                        eenv[n.id] = pstore[src_nid][xs["local_pid"]][xs["edge_dst"]]
+                    elif src_nid in dstore:
+                        eenv[n.id] = dstore[src_nid][xs["local_pid"]][xs["edge_dst"]]
+                    else:
+                        eenv[n.id] = vstore[src_nid][xs["dst_global"]]
+                else:
+                    eenv[n.id] = apply_compute(n.op, n.attrs, params,
+                                               [elookup(i) for i in n.inputs])
+            return eenv, elookup
+
+        for phase in sp.phases:
+            # ---- destination block on the local partitions, then ONE
+            # exchange of whatever this boundary drains to tile-side readers
+            if phase.dst.store_ids:
+                denv = eval_vertex(safe_pad_ids, phase.dst.nodes, padded=True)
+                pending: Dict[int, Array] = {}
+                for nid in phase.dst.store_ids:
+                    dstore[nid] = denv[nid]
+                    if nid in self._publish:
+                        pending[nid] = denv[nid]
+                publish(pending)
+            if not phase.has_tile_work:
+                continue
+
+            scan_gathers = phase.scan_gathers()  # kernel_dispatch=False: all
+            acc = _init_gather_acc(scan_gathers, P_loc, dmax)
+
+            def body(acc, xs):
+                emask = (jnp.arange(xs["edge_src"].shape[0])
+                         < xs["n_edge"])[:, None]
+                pid = xs["local_pid"]
+                senv = eval_vertex(xs["src_ids"], phase.src.nodes)
+                _, elookup = edge_env(phase.edge.nodes, xs, senv)
+                edst = xs["edge_dst"]
+                for g in scan_gathers:
+                    _gather_accumulate(acc, g, elookup(g.acc.value_id),
+                                       emask, edst, pid, dmax)
+                return acc, 0
+
+            for ta in ops["buckets"]:
+                xs = {k: v[0] for k, v in ta.items()}
+                xs["dst_global"] = jnp.minimum(
+                    part_start[xs["part_id"]][:, None] + xs["edge_dst"], V - 1)
+                acc, _ = jax.lax.scan(body, acc, xs)
+
+            # ---- gather results stay local; exchange only tile-side reads
+            pending = {}
+            for g in scan_gathers:
+                val = _drain_gather_acc(acc, g)
+                pstore[g.acc.recv_id] = val
+                if g.acc.recv_id in self._publish:
+                    pending[g.acc.recv_id] = val
+            publish(pending)
+
+        return [vstore[o] for o in sp.outputs]
+
+
+def run_sharded(compiled: C.CompiledGNN, graph: Graph, tiles,
+                inputs: Dict[str, Array], params: Dict[str, Array],
+                n_devices: Optional[int] = None,
+                mode: str = "cost") -> List[Array]:
+    return ShardedRunner(compiled, graph, tiles, n_devices,
+                         mode=mode)(inputs, params)

@@ -16,6 +16,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import heapq
+import math
 from typing import Deque, Dict, List, Optional, Tuple
 
 from .isa import Instr
@@ -201,6 +202,83 @@ def simulate_model(sde: SDEFunctions, tiles: TileSet,
     tasks, stats = build_task_graph(sde, tiles, hw, padded=padded,
                                     inter_layer=inter_layer)
     return simulate(tasks, stats, hw)
+
+
+@dataclasses.dataclass
+class ShardedSimResult:
+    """Multi-chip cost model: per-chip event-driven simulation plus the
+    layer-boundary exchange traffic (the one cross-chip all-gather of the
+    drained partition layout per boundary)."""
+
+    n_chips: int
+    cycles: int                      # max per-chip cycles + exchange stalls
+    time_ms: float
+    per_chip_cycles: List[int]
+    exchange_cycles: int             # total cycles spent in boundary exchanges
+    exchange_bytes: int              # total cross-chip traffic
+    n_exchanges: int
+    chip_results: List[SimResult]
+
+    def speedup_over(self, other) -> float:
+        return other.time_ms / self.time_ms
+
+    @property
+    def balance(self) -> float:
+        """max / mean per-chip cycles (1.0 = perfectly balanced)."""
+        mean = sum(self.per_chip_cycles) / max(len(self.per_chip_cycles), 1)
+        return max(self.per_chip_cycles) / max(mean, 1.0)
+
+
+def simulate_sharded(sde: SDEFunctions, tiles: TileSet,
+                     hw: Optional[HWConfig] = None, n_chips: int = 2,
+                     padded: bool = False, inter_layer: str = "pipelined",
+                     mode: str = "cost",
+                     exchange_dim: Optional[int] = None) -> ShardedSimResult:
+    """Cost a sharded execution over ``n_chips`` chips, each owning whole
+    destination partitions (:func:`~repro.core.tiling.plan_shards`).
+
+    Each chip's task graph (its partitions only) runs through the
+    event-driven simulator independently; chips synchronize at the
+    ``n_layers - 1`` layer boundaries, where the drained layer output — one
+    row per destination vertex, ``out_dim`` wide — is all-gathered over the
+    chip-to-chip links (ring model: each link carries ``(K-1)/K`` of the
+    full buffer).  Final outputs are written to each chip's own HBM
+    (already costed as task ``bytes_out``), so they add no exchange.
+
+    A boundary drains the *hidden*-layer width, not the output head's:
+    ``exchange_dim`` overrides the per-row width when known; the default
+    takes ``max(src_load_dim, out_dim)`` — the source-input width tracks
+    the model's feature width, so a narrow classification head does not
+    under-cost the exchange.
+    """
+    from .tiling import plan_shards
+
+    hw = hw or HWConfig()
+    plan = plan_shards(tiles, n_chips, mode=mode)
+    chips: List[SimResult] = []
+    for k in range(n_chips):
+        tasks, stats = build_task_graph(sde, tiles, hw, padded=padded,
+                                        inter_layer=inter_layer,
+                                        parts=plan.parts_of_shard[k])
+        chips.append(simulate(tasks, stats, hw))
+
+    n_exch = max(sde.n_layers - 1, 0) if n_chips > 1 else 0
+    dim = max(exchange_dim if exchange_dim is not None
+              else max(sde.src_load_dim, sde.out_dim), 1)
+    rows = int(tiles.part_size.sum())
+    bytes_per_exch = rows * dim * hw.dtype_bytes
+    exch_cycles_each = int(math.ceil(
+        bytes_per_exch * (n_chips - 1) / max(n_chips, 1)
+        / hw.interconnect_bytes_per_cycle)) if n_exch else 0
+    exch_cycles = n_exch * exch_cycles_each
+    total = max(c.cycles for c in chips) + exch_cycles
+    return ShardedSimResult(
+        n_chips=n_chips, cycles=total,
+        time_ms=total / (hw.freq_ghz * 1e6),
+        per_chip_cycles=[c.cycles for c in chips],
+        exchange_cycles=exch_cycles,
+        exchange_bytes=n_exch * bytes_per_exch * max(n_chips - 1, 0),
+        n_exchanges=n_exch, chip_results=chips)
 
 
 def serialized_baseline(sde: SDEFunctions, tiles: TileSet,

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,10 +51,17 @@ class HWConfig:
     uem_mbytes: float = 21.0    # unified embedding memory (eDRAM)
     th_kbytes: float = 256.0    # tile hub SRAM
     dtype_bytes: int = 4
+    # chip-to-chip link bandwidth (multi-chip scaling, PAPERS.md co-design
+    # direction; the paper itself is single-chip)
+    interconnect_gbps: float = 100.0
 
     @property
     def hbm_bytes_per_cycle(self) -> float:
         return self.hbm_gbps / self.freq_ghz  # GB/s / GHz = bytes/ns = bytes/cycle
+
+    @property
+    def interconnect_bytes_per_cycle(self) -> float:
+        return self.interconnect_gbps / self.freq_ghz
 
     def scaled(self, **kw) -> "HWConfig":
         return dataclasses.replace(self, **kw)
@@ -124,7 +131,8 @@ def _source_partitions(tiles) -> List[np.ndarray]:
 
 
 def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
-                     padded: bool = False, inter_layer: str = "barrier"
+                     padded: bool = False, inter_layer: str = "barrier",
+                     parts: Optional[Sequence[int]] = None
                      ) -> Tuple[List[Task], Dict[str, int]]:
     """Lower (SDE functions × tile set) into the stream task DAG.
 
@@ -147,10 +155,18 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
     turn waits only on its own partition's gather barrier).  Within a layer
     the strict chain is kept, so the two modes isolate exactly the
     inter-layer overlap.
+
+    ``parts`` restricts the graph to the given destination partitions — the
+    per-chip view of a sharded execution (one chip owns whole partitions,
+    see :class:`~repro.core.tiling.ShardPlan`); boundary source-partition
+    dependencies on partitions outside the set are cross-chip edges and are
+    costed separately by ``simulator.simulate_sharded``.
     """
     if inter_layer not in ("barrier", "pipelined"):
         raise ValueError(f"unknown inter_layer mode {inter_layer!r}")
     pipelined = inter_layer == "pipelined"
+    part_list = (list(range(tiles.n_dst_parts)) if parts is None
+                 else [int(p) for p in parts])
     tasks: List[Task] = []
     stats = {"offchip_read": 0, "offchip_write": 0, "macs": 0, "elw_ops": 0}
     by = hw.dtype_bytes
@@ -220,7 +236,7 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
         # own previous barrier) so tile tasks can reference the drains of
         # the partitions producing their source values; otherwise tile tasks
         # interleave with the strict dStream chain as before.
-        for p in range(tiles.n_dst_parts):
+        for p in part_list:
             n_dst = int(tiles.part_size[p])
             if boundary:
                 deps = [bar_prev[p]] if p in bar_prev else []
@@ -236,7 +252,7 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
             if not boundary and has_tile_work:
                 emit_tiles(p)
         if boundary and has_tile_work:
-            for p in range(tiles.n_dst_parts):
+            for p in part_list:
                 emit_tiles(p)
         bar_prev = bar_cur
 

@@ -379,6 +379,104 @@ def pad_tileset(tiles: TileSet, n_tiles: int, s_max: int, e_max: int) -> TileSet
         sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges)
 
 
+@dataclasses.dataclass
+class ShardPlan:
+    """Assignment of destination partitions to mesh shards (multi-device /
+    multi-chip execution).
+
+    Because a tile is owned by exactly one destination partition, assigning
+    whole partitions to shards keeps every gather accumulator device-local —
+    the only cross-shard dataflow is the layer-boundary read of *drained*
+    source values (one all-gather in the executed runner, one exchange step
+    in the simulator's multi-chip cost model).
+
+    ``parts_of_shard[k]`` lists the global partition ids shard ``k`` owns in
+    ascending order; shards are padded to a common ``n_local_parts`` slot
+    count (ragged partition counts — ``P`` not divisible by the mesh — leave
+    trailing invalid slots on the lighter shards).
+    """
+
+    n_shards: int
+    parts_of_shard: List[np.ndarray]   # per shard: global partition ids, asc
+    shard_of_part: np.ndarray          # (P,) int32
+    local_slot_of_part: np.ndarray     # (P,) int32 — slot within owning shard
+    part_cost: np.ndarray              # (P,) int64 — padded edge-slot cost
+    mode: str
+
+    @property
+    def n_parts(self) -> int:
+        return int(self.shard_of_part.shape[0])
+
+    @property
+    def n_local_parts(self) -> int:
+        """Local partition slots per shard (max over shards, >= 1)."""
+        return max(1, max(len(p) for p in self.parts_of_shard))
+
+    def shard_costs(self) -> np.ndarray:
+        """(K,) summed padded-edge cost per shard (balance diagnostic)."""
+        return np.array([int(self.part_cost[p].sum())
+                         for p in self.parts_of_shard], np.int64)
+
+    def signature(self) -> Tuple:
+        """Exact-assignment identity (tests / diagnostics).  Runner cache
+        keys use only the shape-relevant parts (K, n_local_parts, caps)."""
+        return ("shardplan", self.mode, self.n_shards, self.n_local_parts,
+                tuple(tuple(p.tolist()) for p in self.parts_of_shard))
+
+
+def partition_costs(tiles) -> np.ndarray:
+    """(P,) padded edge-slot cost per destination partition — what a
+    static-shape executor pays for that partition's tiles.  Vectorized:
+    this runs per request on the sharded serving hot path."""
+    part_id = np.asarray(tiles.part_id)
+    if isinstance(tiles, BucketedTileSet):
+        pad_e = np.asarray(tiles._pad_e, np.int64)
+    else:
+        pad_e = np.full(part_id.shape, tiles.e_max, np.int64)
+    cost = np.zeros(tiles.n_dst_parts, np.int64)
+    np.add.at(cost, part_id, pad_e)
+    return cost
+
+
+def plan_shards(tiles, n_shards: int, mode: str = "cost") -> ShardPlan:
+    """Assign destination partitions to ``n_shards`` mesh shards.
+
+    ``mode="cost"`` runs deterministic LPT (largest processing time) greedy
+    balancing on the padded edge-slot cost — best balance for a fixed tile
+    set.  ``mode="contiguous"`` splits the partition range evenly — a pure
+    function of (P, K), which the serving layer needs so structurally-equal
+    requests land on one shard layout regardless of edge distribution.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    P = tiles.n_dst_parts
+    cost = partition_costs(tiles)
+    if mode == "contiguous":
+        bounds = _even_bounds(P, n_shards)
+        parts = [np.arange(bounds[k], bounds[k + 1], dtype=np.int64)
+                 for k in range(n_shards)]
+    elif mode == "cost":
+        order = np.argsort(-cost, kind="stable")      # heaviest first, ties by id
+        loads = np.zeros(n_shards, np.int64)
+        assign: List[List[int]] = [[] for _ in range(n_shards)]
+        for p in order:
+            k = int(np.argmin(loads))                 # least-loaded, ties low id
+            assign[k].append(int(p))
+            loads[k] += cost[p]
+        parts = [np.sort(np.asarray(a, np.int64)) for a in assign]
+    else:
+        raise ValueError(f"unknown shard mode {mode!r}")
+
+    shard_of = np.zeros(P, np.int32)
+    slot_of = np.zeros(P, np.int32)
+    for k, ps in enumerate(parts):
+        shard_of[ps] = k
+        slot_of[ps] = np.arange(len(ps), dtype=np.int32)
+    return ShardPlan(n_shards=n_shards, parts_of_shard=parts,
+                     shard_of_part=shard_of, local_slot_of_part=slot_of,
+                     part_cost=cost, mode=mode)
+
+
 def build_tiles(graph: Graph, n_dst_parts: int, n_src_parts: int, *,
                 sparse: bool = True, pad_multiple: int = 8,
                 reorder: Optional[str] = None, n_buckets: Optional[int] = None):

@@ -23,7 +23,8 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..core import compiler as C
-from ..core.pipeline import PipelinedRunner
+from ..core.pipeline import (PipelinedRunner, ShardedRunner,
+                             shard_layout_signature)
 from ..gnn import models as M
 from ..gnn.graphs import Graph, batch_graphs
 from .cache import ProgramCache
@@ -50,13 +51,25 @@ class InferenceServer:
     here are the default weights for every request.  ``donate_inputs=None``
     auto-enables XLA buffer donation for the per-request padded arrays on
     accelerator backends (donation is a no-op warning on CPU).
+
+    ``shard_devices=N`` routes *large* size classes — padded vertex count >=
+    ``shard_min_vertices`` — through a data-parallel
+    :class:`~repro.core.pipeline.ShardedRunner` over an N-device mesh
+    (contiguous partition assignment + power-of-two per-shard tile caps, so
+    structurally-similar requests share one compiled shape).  The cache key
+    then carries the device count and realized shard layout: a sharded
+    program can never alias a single-device one, nor a different mesh size.
+    Sharded programs run the pure scan schedule (``kernel_dispatch`` applies
+    only to the single-device route).
     """
 
     def __init__(self, model: Union[str, C.CompiledGNN],
                  params: Optional[Dict[str, Array]] = None, *,
                  n_layers: int = 1, kernel_dispatch: bool = True,
                  cache_capacity: int = 32, target_part: int = 256,
-                 donate_inputs: Optional[bool] = None):
+                 donate_inputs: Optional[bool] = None,
+                 shard_devices: Optional[int] = None,
+                 shard_min_vertices: int = 2048):
         if isinstance(model, str):
             self.compiled = C.compile_gnn(
                 M.trace_named(model) if n_layers == 1
@@ -74,11 +87,27 @@ class InferenceServer:
             import jax
             donate_inputs = jax.default_backend() != "cpu"
         self.donate_inputs = donate_inputs
+        if shard_devices is not None:
+            import jax
+            if shard_devices < 1:
+                raise ValueError(
+                    f"shard_devices must be >= 1, got {shard_devices}")
+            # fail at configuration time, not when the first large batch
+            # arrives hours into a serving session
+            if shard_devices > len(jax.devices()):
+                raise ValueError(
+                    f"shard_devices={shard_devices} but only "
+                    f"{len(jax.devices())} jax devices are visible; on CPU "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                    "before importing jax")
+        self.shard_devices = shard_devices
+        self.shard_min_vertices = shard_min_vertices
         self.cache = ProgramCache(capacity=cache_capacity)
         self.shapes = ShapeRegistry(target_part=target_part)
         self._requests = 0
         self._graphs_served = 0
         self._batches_run = 0
+        self._sharded_batches = 0
 
     # ------------------------------------------------------------------ API
     def submit(self, graphs: Sequence[Graph],
@@ -113,6 +142,7 @@ class InferenceServer:
         return dict(requests=self._requests, graphs=self._graphs_served,
                     batches=self._batches_run, cache_size=len(self.cache),
                     n_layers=self.compiled.n_layers,
+                    sharded_batches=self._sharded_batches,
                     cache=self.cache.stats.as_dict())
 
     @property
@@ -155,12 +185,27 @@ class InferenceServer:
             merged_inputs[name] = _pad_rows(
                 np.concatenate([np.asarray(inp[name]) for inp in inputs]), E_pad)
 
-        key = structure_signature(self.compiled, tiles, E_pad,
-                                  self.kernel_dispatch)
-        runner = self.cache.get_or_build(
-            key, lambda: PipelinedRunner(self.compiled, merged_graph, tiles,
-                                         kernel_dispatch=self.kernel_dispatch,
-                                         donate_inputs=self.donate_inputs))
+        n_dev = (self.shard_devices
+                 if self.shard_devices and self.shard_devices > 1
+                 and V_pad >= self.shard_min_vertices else 1)
+        if n_dev > 1:
+            # sharded route: the scan-schedule program over an n_dev mesh;
+            # key carries the mesh size + realized shard layout shapes
+            key = structure_signature(self.compiled, tiles, E_pad, False) + (
+                shard_layout_signature(tiles, n_dev, mode="contiguous",
+                                       quantize_tile_cap=True),)
+            runner = self.cache.get_or_build(
+                key, lambda: ShardedRunner(self.compiled, merged_graph, tiles,
+                                           n_dev, mode="contiguous",
+                                           quantize_tile_cap=True))
+            self._sharded_batches += 1
+        else:
+            key = structure_signature(self.compiled, tiles, E_pad,
+                                      self.kernel_dispatch)
+            runner = self.cache.get_or_build(
+                key, lambda: PipelinedRunner(self.compiled, merged_graph, tiles,
+                                             kernel_dispatch=self.kernel_dispatch,
+                                             donate_inputs=self.donate_inputs))
         outs = runner.run_with(tiles, merged_inputs, params)
         self._batches_run += 1
 

@@ -30,6 +30,20 @@ def test_bench_multilayer_smoke():
     assert metrics["gcn"]["cse_removed"] >= 1
 
 
+def test_bench_sharded_smoke():
+    """Acceptance (ISSUE 5): the simulated multi-chip scaling curve is
+    monotone and 8 chips beat 1 chip comfortably on the cit-Patents-like
+    config, with nonzero modeled exchange traffic."""
+    from benchmarks import bench_sharded
+
+    chips = bench_sharded.run_chip_scaling(smoke=True)
+    assert set(chips) == {"gcn", "gat"}
+    for name, curve in chips.items():
+        assert [c["n_chips"] for c in curve] == [1, 2, 4, 8]
+        assert curve[-1]["speedup"] > 2.0, (name, curve)
+        assert all(c["exchange_cycles"] > 0 for c in curve[1:]), (name, curve)
+
+
 def test_bench_serving_smoke():
     """Acceptance (ISSUE 3): batched serving >= 2x graphs/sec over the
     per-graph sequential baseline at batch 64, with a > 90% post-warmup

@@ -1,0 +1,80 @@
+"""Golden cycle-count regression for the stream simulator (ISSUE 5).
+
+The event-driven simulator is deterministic, so scheduler or cost-model
+changes shift cycle counts *silently* — parity tests keep passing while the
+modeled performance story drifts.  This test freezes the five paper models
+on the cit-Patents-like configuration (2-layer stacked, 6x6 sparse grid)
+across three schedules — barrier, inter-layer pipelined, and 4-chip sharded
+— into ``tests/golden/simulator.json``.
+
+Intentional changes follow the explicit-update workflow:
+
+    UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_simulator.py
+
+then commit the regenerated JSON together with the change that moved it.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import compiler, isa, simulator, tiling
+from repro.gnn import graphs, models
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "simulator.json")
+N_LAYERS = 2
+N_CHIPS = 4
+
+
+def _measure():
+    g = graphs.paper_graph("cit-Patents", scale=0.001, seed=0, n_edge_types=3)
+    ts = tiling.grid_tile(g, 6, 6, sparse=True)
+    out = {}
+    for name in models.PAPER_MODELS:
+        c = compiler.compile_gnn(models.trace_stacked(name, N_LAYERS, 16, 16, 16))
+        sde = isa.emit_sde(c.schedule(False))
+        barrier = simulator.simulate_model(sde, ts)
+        pipe = simulator.simulate_model(sde, ts, inter_layer="pipelined")
+        shard = simulator.simulate_sharded(sde, ts, n_chips=N_CHIPS)
+        out[name] = {
+            "barrier_cycles": barrier.cycles,
+            "pipelined_cycles": pipe.cycles,
+            "sharded4_cycles": shard.cycles,
+            "sharded4_exchange_cycles": shard.exchange_cycles,
+            "macs": barrier.macs,
+        }
+    return out
+
+
+def test_simulator_golden_cycles():
+    got = _measure()
+    if os.environ.get("UPDATE_GOLDEN"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"golden file regenerated at {GOLDEN}; commit it")
+    assert os.path.exists(GOLDEN), (
+        f"missing {GOLDEN}; generate it with UPDATE_GOLDEN=1")
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    mismatches = {
+        f"{name}.{key}": (want[name][key], got[name][key])
+        for name in want for key in want[name]
+        if got.get(name, {}).get(key) != want[name][key]
+    }
+    assert not mismatches, (
+        "simulator cycle counts moved (golden, measured): "
+        f"{mismatches}; if intentional rerun with UPDATE_GOLDEN=1 and commit "
+        "the regenerated tests/golden/simulator.json")
+    assert set(got) == set(want)
+
+
+def test_golden_schedules_are_ordered():
+    """Sanity on the frozen numbers themselves: pipelining and sharding must
+    keep their modeled wins (the story the golden file protects)."""
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    for name, rec in want.items():
+        assert rec["pipelined_cycles"] < rec["barrier_cycles"], name
+        assert rec["sharded4_cycles"] < rec["pipelined_cycles"], name

@@ -1,0 +1,368 @@
+"""Sharded execution over a device mesh (ISSUE 5).
+
+Pinned here: (a) :func:`~repro.core.tiling.plan_shards` balances padded-edge
+cost and handles ragged partition counts; (b) the
+:class:`~repro.core.pipeline.ShardedRunner` matches the single-device
+``PipelinedRunner`` and the whole-graph oracle on all five paper models —
+in-process on ``min(4, visible devices)`` shards (the CI sharded-smoke step
+forces 8 host devices so this is a REAL multi-device run there), and in a
+subprocess on a forced 8-host-device mesh across {1, 2, 4, 8}-shard meshes;
+(c) the lowered program contains exactly ONE cross-device collective per
+layer boundary; (d) the multi-chip simulator cost model scales; (e) a
+hypothesis conformance sweep over random graphs × models × layers × ragged
+partition/bucket counts.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor, pipeline, simulator, tiling, isa
+from repro.gnn import graphs, models
+
+DIM = 16
+REL_TOL = 1e-4
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.max(np.abs(a - b)) / max(1.0, np.max(np.abs(a))))
+
+
+def _compiled(name, n_layers, dim=DIM):
+    tr = (models.trace_named(name, dim, dim) if n_layers == 1
+          else models.trace_stacked(name, n_layers, dim, dim, dim))
+    return tr, compiler.compile_gnn(tr)
+
+
+def _avail_mesh(cap=4):
+    import jax
+    return min(cap, len(jax.devices()))
+
+
+# ---------------------------------------------------------------------------
+# ShardPlan
+# ---------------------------------------------------------------------------
+
+def test_shard_plan_cost_balance():
+    g = graphs.random_graph(300, 1500, seed=0, model="powerlaw")
+    bt = tiling.bucket_tiles(tiling.grid_tile(g, 8, 8, sparse=True), 3)
+    plan = tiling.plan_shards(bt, 4, mode="cost")
+    costs = plan.shard_costs()
+    assert costs.sum() == tiling.partition_costs(bt).sum()
+    # LPT greedy: no shard more than 2x the mean (loose, deterministic bound)
+    assert costs.max() <= 2 * max(costs.mean(), 1)
+    # every partition owned exactly once
+    owned = np.concatenate(plan.parts_of_shard)
+    assert sorted(owned.tolist()) == list(range(8))
+    for k, parts in enumerate(plan.parts_of_shard):
+        assert all(plan.shard_of_part[p] == k for p in parts)
+        assert [plan.local_slot_of_part[p] for p in parts] == list(range(len(parts)))
+
+
+def test_shard_plan_ragged_and_modes():
+    g = graphs.random_graph(100, 400, seed=1, model="powerlaw")
+    ts = tiling.grid_tile(g, 5, 5, sparse=True)
+    # 5 partitions over 4 shards: ragged — one shard owns 2, slots padded
+    plan = tiling.plan_shards(ts, 4, mode="cost")
+    assert plan.n_local_parts == 2
+    assert sorted(len(p) for p in plan.parts_of_shard) == [1, 1, 1, 2]
+    # contiguous mode is a pure function of (P, K): ranges in order
+    pc = tiling.plan_shards(ts, 4, mode="contiguous")
+    flat = np.concatenate(pc.parts_of_shard)
+    assert flat.tolist() == sorted(flat.tolist())
+    # determinism
+    assert (tiling.plan_shards(ts, 4, mode="cost").signature()
+            == plan.signature())
+    # more shards than partitions: trailing shards stay empty
+    p7 = tiling.plan_shards(ts, 7, mode="cost")
+    assert sum(len(p) for p in p7.parts_of_shard) == 5
+    assert p7.n_local_parts == 1
+    with pytest.raises(ValueError, match="n_shards"):
+        tiling.plan_shards(ts, 0)
+    with pytest.raises(ValueError, match="unknown shard mode"):
+        tiling.plan_shards(ts, 2, mode="zigzag")
+
+
+def test_shard_layout_signature_distinguishes_meshes():
+    g = graphs.random_graph(120, 500, seed=2, model="powerlaw")
+    bt = tiling.bucket_tiles(tiling.grid_tile(g, 6, 6, sparse=True), 3)
+    sigs = {pipeline.shard_layout_signature(bt, k) for k in (1, 2, 4, 8)}
+    assert len(sigs) == 4    # device count can never alias in a cache key
+    # quantized caps differ from exact caps (pow2 snap) but are deterministic
+    q = pipeline.shard_layout_signature(bt, 4, quantize_tile_cap=True)
+    assert q == pipeline.shard_layout_signature(bt, 4, quantize_tile_cap=True)
+
+
+# ---------------------------------------------------------------------------
+# conformance: ShardedRunner vs PipelinedRunner vs whole-graph oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", models.PAPER_MODELS)
+@pytest.mark.parametrize("n_layers", [1, 2])
+def test_sharded_matches_pipelined_and_oracle(name, n_layers):
+    """Runs on min(4, visible) shards: a real 4-way mesh under the CI
+    sharded-smoke step (8 forced host devices), a 1-shard mesh in plain
+    tier-1 — the full shard_map/all-gather path executes either way."""
+    g = graphs.random_graph(150, 600, seed=3, model="powerlaw", n_edge_types=3)
+    tr, c = _compiled(name, n_layers)
+    params = models.init_params(tr)
+    inputs = models.init_inputs(tr, g)
+    ref = executor.run_reference(tr, g, inputs, params)
+    bt = tiling.bucket_tiles(tiling.grid_tile(g, 5, 5, sparse=True), 3)
+    out_p = pipeline.run_pipelined(c, g, bt, inputs, params,
+                                   kernel_dispatch=False)
+    out_s = pipeline.run_sharded(c, g, bt, inputs, params,
+                                 n_devices=_avail_mesh())
+    assert _rel_err(out_p[0], out_s[0]) < REL_TOL, (name, n_layers)
+    assert _rel_err(ref[0], out_s[0]) < REL_TOL, (name, n_layers)
+
+
+def test_sharded_runner_bind_and_run_with():
+    """A structurally-identical tile set rebinds through the warm
+    compilation: same outputs as a fresh runner, no retrace."""
+    tr, c = _compiled("gcn", 2)
+    params = models.init_params(tr)
+    g1 = graphs.random_graph(120, 480, seed=4, model="powerlaw")
+    g2 = graphs.random_graph(120, 480, seed=5, model="powerlaw")
+    t1 = tiling.grid_tile(g1, 4, 4, sparse=True)
+    t2 = tiling.grid_tile(g2, 4, 4, sparse=True)
+    # snap both onto one shape envelope (what the serving registry does)
+    env = (max(t1.n_tiles, t2.n_tiles), max(t1.s_max, t2.s_max),
+           max(t1.e_max, t2.e_max))
+    t1, t2 = tiling.pad_tileset(t1, *env), tiling.pad_tileset(t2, *env)
+    assert t1.shape_signature() == t2.shape_signature()
+    n_dev = _avail_mesh()
+    r = pipeline.ShardedRunner(c, g1, t1, n_dev, mode="contiguous",
+                               quantize_tile_cap=True)
+    i1, i2 = models.init_inputs(tr, g1), models.init_inputs(tr, g2)
+    out_warm = r.run_with(t2, i2, params)
+    fresh = pipeline.ShardedRunner(c, g2, t2, n_dev, mode="contiguous",
+                                   quantize_tile_cap=True)
+    out_fresh = fresh(i2, params)
+    assert _rel_err(out_fresh[0], out_warm[0]) < REL_TOL
+    r(i1, params)
+    assert r.jit_cache_size() in (-1, 1)     # no silent retrace
+    # identical layout => identical signature: the premise of the cache hit
+    assert r.signature == fresh.signature
+
+
+def test_sharded_runner_validation():
+    import jax
+    tr, c = _compiled("gcn", 1)
+    g = graphs.random_graph(60, 240, seed=6)
+    ts = tiling.grid_tile(g, 3, 3, sparse=True)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        pipeline.ShardedRunner(c, g, ts, len(jax.devices()) + 1)
+    r = pipeline.ShardedRunner(c, g, ts, 1)
+    other = tiling.grid_tile(graphs.random_graph(61, 250, seed=7), 3, 3,
+                             sparse=True)
+    if other.shape_signature() != ts.shape_signature():
+        with pytest.raises(ValueError, match="not structurally identical"):
+            r.bind(other)
+
+
+def test_sharded_runner_zero_edge_and_tiny_graphs():
+    """Serving-path boundaries run through the sharded engine too."""
+    tr, c = _compiled("gcn", 1, dim=8)
+    params = models.init_params(tr)
+    for g in (graphs.Graph(src=np.empty(0, np.int32),
+                           dst=np.empty(0, np.int32), n_vertices=6),
+              graphs.Graph(src=np.zeros(1, np.int32),
+                           dst=np.zeros(1, np.int32), n_vertices=1)):
+        inputs = models.init_inputs(tr, g)
+        ref = executor.run_reference(tr, g, inputs, params)
+        ts = tiling.grid_tile(g, 2, 2, sparse=True)
+        ts = tiling.pad_tileset(ts, max(ts.n_tiles, 2), max(ts.s_max, 8),
+                                max(ts.e_max, 8))
+        out = pipeline.run_sharded(c, g, ts, inputs, params,
+                                   n_devices=_avail_mesh())
+        assert _rel_err(ref[0], out[0]) < REL_TOL, (g.n_vertices, g.n_edges)
+
+
+# ---------------------------------------------------------------------------
+# serving route
+# ---------------------------------------------------------------------------
+
+def test_serving_shard_route_validation():
+    import jax
+    from repro.serve import InferenceServer
+    tr, c = _compiled("gcn", 1, dim=8)
+    with pytest.raises(ValueError, match="shard_devices must be"):
+        InferenceServer(c, models.init_params(tr), shard_devices=0)
+    # misconfiguration fails at construction, not at the first large batch
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        InferenceServer(c, models.init_params(tr),
+                        shard_devices=len(jax.devices()) + 1)
+
+
+def test_serving_shard_route_in_process():
+    """Large classes go sharded, small classes stay single-device, repeat
+    requests hit the warm sharded runner.  Needs >= 2 devices (the CI
+    sharded-smoke step forces 8); the subprocess variant below covers plain
+    tier-1 hosts."""
+    import jax
+    from repro.serve import InferenceServer
+    if len(jax.devices()) < 2:
+        pytest.skip("needs a multi-device mesh (XLA_FLAGS host device count)")
+    _run_serving_shard_route(min(4, len(jax.devices())))
+
+
+def _run_serving_shard_route(n_dev):
+    from repro.serve import InferenceServer
+    tr, c = _compiled("gcn", 2, dim=16)
+    params = models.init_params(tr)
+    # threshold sits between the small class's padded V (64) and the big
+    # class's (~480): the two routes must coexist in one server
+    srv = InferenceServer(c, params, n_layers=2, shard_devices=n_dev,
+                          shard_min_vertices=256)
+    for rnd in range(3):
+        big = [graphs.random_graph(120 + rnd, 500, seed=10 * rnd + i)
+               for i in range(3)]
+        small = [graphs.random_graph(16, 60, seed=20 * rnd + i)
+                 for i in range(2)]
+        gs = big + small
+        outs = srv.submit(gs, [models.init_inputs(tr, g) for g in gs])
+        for g, out in zip(gs, outs):
+            inp = models.init_inputs(tr, g)
+            ref = executor.run_reference(tr, g, inp, params)
+            assert _rel_err(ref[0], out[0]) < REL_TOL, (rnd, g.n_vertices)
+    st = srv.stats()
+    assert st["sharded_batches"] == 3          # one big batch per round
+    assert st["batches"] == 6                  # + one small batch per round
+    # the sharded route amortizes: rounds 2 and 3 hit the warm runner
+    assert srv.compile_count <= 3              # <= one per distinct class
+    assert srv.cache_hits >= 3
+
+
+_SERVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, {src!r})
+    sys.path.insert(0, {tests!r})
+    from test_sharded import _run_serving_shard_route
+    _run_serving_shard_route(4)
+    print("SERVE_ROUTE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_serving_shard_route_forced_mesh():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    script = _SERVE_SCRIPT.format(src=os.path.abspath(SRC),
+                                  tests=os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SERVE_ROUTE_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# multi-chip simulator axis
+# ---------------------------------------------------------------------------
+
+def test_simulated_chip_scaling():
+    g = graphs.paper_graph("cit-Patents", scale=0.001, seed=0, n_edge_types=3)
+    ts = tiling.grid_tile(g, 6, 6, sparse=True)
+    _, c = _compiled("gcn", 2)
+    sde = isa.emit_sde(c.schedule(False))
+    base = simulator.simulate_model(sde, ts, inter_layer="pipelined")
+    prev = base.cycles
+    for k in (2, 4):
+        r = simulator.simulate_sharded(sde, ts, n_chips=k)
+        assert len(r.per_chip_cycles) == k
+        assert r.cycles < prev, (k, r.cycles, prev)   # monotone scaling here
+        assert r.n_exchanges == 1 and r.exchange_cycles > 0
+        assert r.exchange_bytes > 0 and r.balance >= 1.0
+        prev = r.cycles
+    # a 1-chip "sharded" run degenerates to the plain simulation, no exchange
+    r1 = simulator.simulate_sharded(sde, ts, n_chips=1)
+    assert r1.exchange_cycles == 0 and r1.cycles == base.cycles
+
+
+def test_task_graph_parts_restriction():
+    from repro.core.streams import HWConfig, build_task_graph
+    g = graphs.random_graph(120, 500, seed=8, model="powerlaw")
+    ts = tiling.grid_tile(g, 4, 4, sparse=True)
+    _, c = _compiled("gcn", 2)
+    sde = isa.emit_sde(c.schedule(False))
+    full, _ = build_task_graph(sde, ts, HWConfig(), inter_layer="pipelined")
+    plan = tiling.plan_shards(ts, 2)
+    halves = [build_task_graph(sde, ts, HWConfig(), inter_layer="pipelined",
+                               parts=plan.parts_of_shard[k])[0]
+              for k in range(2)]
+    # per-chip graphs are valid DAGs and together cover every tile task
+    for tasks in halves:
+        for t in tasks:
+            assert all(d < t.tid for d in t.deps)
+    n_tile = sum(1 for t in full if t.kind in ("s", "e"))
+    assert sum(sum(1 for t in h if t.kind in ("s", "e")) for h in halves) == n_tile
+
+
+# ---------------------------------------------------------------------------
+# forced multi-device mesh (subprocess: device count binds at jax init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, re, sys
+    import numpy as np
+    from repro.core import compiler, pipeline, tiling
+    from repro.gnn import graphs, models
+
+    DIM = 16
+    out = []
+    g = graphs.random_graph(150, 600, seed=3, model="powerlaw", n_edge_types=3)
+    for name in ("gcn", "gat", "sage", "ggnn", "rgcn"):
+        tr = models.trace_stacked(name, 2, DIM, DIM, DIM)
+        c = compiler.compile_gnn(tr)
+        params = models.init_params(tr)
+        inputs = models.init_inputs(tr, g)
+        ts = tiling.grid_tile(g, 5, 5, sparse=True)   # ragged: 5 parts
+        bt = tiling.bucket_tiles(ts, 3)
+        ref = pipeline.run_pipelined(c, g, bt, inputs, params,
+                                     kernel_dispatch=False)
+        for n_dev in (1, 2, 4, 8):
+            r = pipeline.ShardedRunner(c, g, bt, n_dev)
+            got = r(inputs, params)
+            err = float(np.max(np.abs(np.asarray(got[0]) - np.asarray(ref[0])))
+                        / max(1.0, float(np.max(np.abs(np.asarray(ref[0]))))))
+            rec = {"model": name, "n_dev": n_dev, "rel": err}
+            if n_dev == 4:
+                hlo = r.lower_text(inputs, params)
+                rec["collectives"] = len(re.findall(r"all-gather(?:-start)?\\(", hlo))
+                rec["n_layers"] = c.n_layers
+            out.append(rec)
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_forced_mesh_conformance_and_collective_census():
+    """Acceptance: all five paper models × {1,2,4,8} forced host devices
+    match the single-device PipelinedRunner to rel 1e-4, and the lowered
+    4-device program carries exactly one cross-device collective per layer
+    boundary (layer boundaries + the final output drain = n_layers)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    recs = json.loads(out.stdout.strip().splitlines()[-1])
+    assert len(recs) == 20
+    for rec in recs:
+        assert rec["rel"] < REL_TOL, rec
+    for rec in recs:
+        if "collectives" in rec:
+            assert rec["collectives"] == rec["n_layers"], rec
+
+
+# The hypothesis conformance sweep lives in test_sharded_property.py (its
+# module-level importorskip must not skip the deterministic tests above).

@@ -1,0 +1,135 @@
+"""Serving-path tiling boundaries (ISSUE 5): ``tiling.pad_tileset`` and
+``serve.signature.ShapeRegistry`` on the degenerate graphs a public serving
+endpoint will eventually receive — zero-edge graphs, single-vertex graphs,
+and requests whose padded class exactly equals the registered canonical
+shape (no growth, no recompile).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor, pipeline, tiling
+from repro.gnn import graphs, models
+from repro.serve import InferenceServer
+from repro.serve.signature import ShapeRegistry
+
+
+def _zero_edge(v=6):
+    return graphs.Graph(src=np.empty(0, np.int32), dst=np.empty(0, np.int32),
+                        n_vertices=v)
+
+
+def _single_vertex(self_loop=True):
+    n = 1 if self_loop else 0
+    return graphs.Graph(src=np.zeros(n, np.int32), dst=np.zeros(n, np.int32),
+                        n_vertices=1)
+
+
+# ---------------------------------------------------------------------------
+# pad_tileset
+# ---------------------------------------------------------------------------
+
+def test_pad_tileset_zero_edge_graph():
+    ts = tiling.grid_tile(_zero_edge(), 2, 2, sparse=True)
+    assert ts.n_tiles == 0 and ts.n_edges == 0
+    pt = tiling.pad_tileset(ts, 3, 8, 8)
+    assert pt.n_tiles == 3 and pt.s_max == 8 and pt.e_max == 8
+    # filler tiles: zero edges, attached to the last partition
+    assert pt.n_edge.tolist() == [0, 0, 0]
+    assert pt.part_id.tolist() == [1, 1, 1]
+    assert pt.part_start.tolist() == ts.part_start.tolist()
+
+
+def test_pad_tileset_single_vertex_graph():
+    g = _single_vertex()
+    ts = tiling.grid_tile(g, 2, 2, sparse=True)
+    # one self-loop edge; the 1-vertex range still splits into 2 partitions
+    # (one empty) without index errors
+    assert ts.n_tiles == 1 and int(ts.n_edge.sum()) == 1
+    assert ts.part_size.sum() == 1
+    pt = tiling.pad_tileset(ts, 2, ts.s_max, ts.e_max)
+    assert pt.n_tiles == 2 and int(pt.n_edge.sum()) == 1
+
+
+def test_pad_tileset_no_growth_is_identity():
+    g = graphs.random_graph(40, 160, seed=0)
+    ts = tiling.grid_tile(g, 3, 3, sparse=True)
+    assert tiling.pad_tileset(ts, ts.n_tiles, ts.s_max, ts.e_max) is ts
+
+
+def test_pad_tileset_rejects_shrink():
+    g = graphs.random_graph(40, 160, seed=0)
+    ts = tiling.grid_tile(g, 3, 3, sparse=True)
+    with pytest.raises(ValueError, match="cannot shrink"):
+        tiling.pad_tileset(ts, ts.n_tiles - 1, ts.s_max, ts.e_max)
+    with pytest.raises(ValueError, match="cannot shrink"):
+        tiling.pad_tileset(ts, ts.n_tiles, ts.s_max, ts.e_max - 8)
+
+
+def test_padded_zero_edge_tiles_execute_correctly():
+    """Engines must treat filler tiles as no-ops: a padded zero-edge graph
+    equals the whole-graph reference on both runners and kernel paths."""
+    tr = models.trace_named("gcn", 8, 8)
+    c = compiler.compile_gnn(tr)
+    params = models.init_params(tr)
+    g = _zero_edge()
+    inputs = models.init_inputs(tr, g)
+    ref = np.asarray(executor.run_reference(tr, g, inputs, params)[0])
+    pt = tiling.pad_tileset(tiling.grid_tile(g, 2, 2, sparse=True), 2, 8, 8)
+    for kd in (False, True):
+        out = pipeline.run_pipelined(c, g, pt, inputs, params,
+                                     kernel_dispatch=kd)
+        assert np.max(np.abs(np.asarray(out[0]) - ref)) < 1e-5
+    out = pipeline.run_sharded(c, g, pt, inputs, params, n_devices=1)
+    assert np.max(np.abs(np.asarray(out[0]) - ref)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ShapeRegistry
+# ---------------------------------------------------------------------------
+
+def test_registry_zero_edge_graph_keeps_one_filler_tile():
+    reg = ShapeRegistry()
+    padded, tiles, e_rows = reg.canonical(("k",), _zero_edge())
+    assert tiles.n_tiles >= 1          # kernels always see a non-empty grid
+    assert int(tiles.n_edge.sum()) == 0
+    assert e_rows >= 1                 # edge-input rows padded to >= 1
+    assert padded.n_vertices >= 6
+
+
+def test_registry_single_vertex_graph():
+    reg = ShapeRegistry()
+    padded, tiles, e_rows = reg.canonical(("k",), _single_vertex())
+    assert padded.n_vertices >= 1
+    assert int(tiles.n_edge.sum()) == 1
+
+
+def test_registry_exact_shape_no_growth():
+    """A request that realizes exactly the registered canonical shape must
+    not bump the class (no recompile): signatures stay identical."""
+    reg = ShapeRegistry()
+    g = graphs.random_graph(40, 160, seed=0)
+    _, t1, e1 = reg.canonical(("k",), g)
+    entry = dict(reg._shapes[("k",)])
+    # a graph realizing the registered v_pad exactly (equality, not excess)
+    g2 = graphs.random_graph(entry["v_pad"], 160, seed=1)
+    _, t2, e2 = reg.canonical(("k",), g2)
+    assert reg._shapes[("k",)]["v_pad"] == entry["v_pad"]
+    assert t2.shape_signature() == t1.shape_signature()
+    assert e2 == e1
+    assert len(reg) == 1
+
+
+def test_serving_end_to_end_degenerate_graphs():
+    """The full submit path (batch -> pad -> cached runner -> unbatch)
+    serves zero-edge and single-vertex graphs and matches the reference."""
+    tr = models.trace_named("gcn", 8, 8)
+    c = compiler.compile_gnn(tr)
+    params = models.init_params(tr)
+    srv = InferenceServer(c, params)
+    for g in (_zero_edge(), _single_vertex()):
+        inp = models.init_inputs(tr, g)
+        out = srv.submit([g], [inp])
+        ref = np.asarray(executor.run_reference(tr, g, inp, params)[0])
+        assert out[0][0].shape == ref.shape
+        assert np.max(np.abs(out[0][0] - ref)) < 1e-5
+    assert srv.stats()["graphs"] == 2
