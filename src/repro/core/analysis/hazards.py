@@ -1,0 +1,286 @@
+"""Schedule hazard analysis + static exchange census (ISSUE 6 pass 3).
+
+``analyze_task_graph`` is a static race detector over the stream-task DAG
+from :func:`repro.core.streams.build_task_graph`: it proves every
+cross-tile / cross-layer read is *ordered after its producing drain task*
+through dependency edges alone.  In ``inter_layer="barrier"`` mode that is
+the global property (every task of level ``l`` descends from every
+level-``l-1`` gather barrier); in ``"pipelined"`` mode the layer boundary
+is relaxed to true data dependencies, so the analyzer re-derives — from the
+tile set, independently of the builder — which partitions produce each
+tile's source vertices and demands exactly those drains as ancestors.
+
+``exchange_census`` re-implements the :class:`ShardedRunner` publish-set
+derivation (gather-tainted tile-side reads) *statically* from the
+:class:`ScheduledProgram` and counts the collectives a sharded execution
+must issue — exactly ``n_layers`` for the paper models — replacing the
+regex-over-HLO census as the first-line check.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .. import schedule as S
+from ..streams import Task
+from .diagnostics import Diagnostic
+
+
+# ---------------------------------------------------------------------------
+# task-graph hazard analysis
+# ---------------------------------------------------------------------------
+
+def _tile_source_parts(tiles) -> List[np.ndarray]:
+    """Per flattened tile, the destination partitions owning its source
+    vertices — re-derived here so the analyzer never trusts the builder's
+    ``_source_partitions``."""
+    def one(ts) -> List[np.ndarray]:
+        return [np.unique(np.searchsorted(
+                    ts.part_start, ts.src_ids[t, :int(ts.n_src[t])],
+                    side="right") - 1)
+                for t in range(ts.n_tiles)]
+    if hasattr(tiles, "buckets"):
+        return [ps for b in tiles.buckets for ps in one(b)]
+    return one(tiles)
+
+
+def analyze_task_graph(tasks: Sequence[Task], *, sde=None, tiles=None,
+                       inter_layer: str = "barrier",
+                       parts: Optional[Sequence[int]] = None
+                       ) -> List[Diagnostic]:
+    """Static race detection over a stream-task DAG.
+
+    ``sde`` (the :class:`~repro.core.isa.SDEFunctions` the graph was built
+    from) supplies the level→layer map for boundary detection; ``tiles``
+    supplies the source-partition ground truth for the pipelined checks.
+    Without them only the structural (ZH202) and barrier-coverage (ZH203)
+    checks run.
+    """
+    diags: List[Diagnostic] = []
+    by_tid: Dict[int, Task] = {}
+
+    # --- ZH202: structural validity (unique tids, backward-only deps) ------
+    for t in tasks:
+        if t.tid in by_tid:
+            diags.append(Diagnostic(
+                "ZH202", f"task id {t.tid} used twice ({by_tid[t.tid].label}"
+                         f" and {t.label})", block=t.label, origin="hazard"))
+        by_tid[t.tid] = t
+    for t in tasks:
+        for d in t.deps:
+            if d not in by_tid:
+                diags.append(Diagnostic(
+                    "ZH202", f"dep {d} does not exist", block=t.label,
+                    origin="hazard"))
+            elif d >= t.tid:
+                diags.append(Diagnostic(
+                    "ZH202", f"dep {d} ({by_tid[d].label}) is not older "
+                             f"than this task", block=t.label,
+                    origin="hazard"))
+    if any(d.code == "ZH202" for d in diags):
+        return diags  # ancestor closure needs a sane DAG
+
+    # ancestor closure as bitmasks over tid order (tasks arrive toposorted
+    # by construction; ZH202 above guaranteed deps point backwards)
+    anc: Dict[int, int] = {}
+    for t in sorted(tasks, key=lambda t: t.tid):
+        m = 0
+        for d in t.deps:
+            m |= anc[d] | (1 << d)
+        anc[t.tid] = m
+
+    def ordered_after(t: Task, producer_tid: int) -> bool:
+        return bool(anc[t.tid] >> producer_tid & 1)
+
+    # --- ZH203: every gather barrier covers its partition's e-tasks --------
+    e_of: Dict[Tuple[int, int], List[Task]] = {}
+    for t in tasks:
+        if t.role == "e":
+            e_of.setdefault((t.level, t.part), []).append(t)
+    for t in tasks:
+        if t.role != "barrier":
+            continue
+        missing = [e.tid for e in e_of.get((t.level, t.part), [])
+                   if not ordered_after(t, e.tid)]
+        if missing:
+            diags.append(Diagnostic(
+                "ZH203", f"barrier does not cover tile task(s) "
+                         f"{[by_tid[m].label for m in missing]}",
+                phase=t.level, block=t.label, origin="hazard"))
+
+    # per (level, part): the LAST d-kind task — the handle the next level's
+    # reads must be ordered after (the barrier when the level has tile work,
+    # else the drain itself)
+    last_d: Dict[Tuple[int, int], Task] = {}
+    drain_of: Dict[Tuple[int, int], Task] = {}
+    for t in tasks:
+        if t.kind != "d":
+            continue
+        key = (t.level, t.part)
+        if key not in last_d or t.tid > last_d[key].tid:
+            last_d[key] = t
+        if t.role == "drain":
+            drain_of[key] = t
+    levels = sorted({t.level for t in tasks})
+
+    if inter_layer == "barrier":
+        # --- global property: level l descends from EVERY level-(l-1)
+        # barrier (the classic layer-by-layer chain) -----------------------
+        for li, lvl in enumerate(levels[1:], start=1):
+            prev = [d for (L, _), d in last_d.items() if L == levels[li - 1]]
+            for t in tasks:
+                if t.level != lvl:
+                    continue
+                for b in prev:
+                    if not ordered_after(t, b.tid):
+                        diags.append(Diagnostic(
+                            "ZH201", f"not ordered after level-{b.level} "
+                                     f"barrier {b.label}", phase=t.level,
+                            block=t.label, origin="hazard"))
+        return diags
+
+    # --- pipelined: layer boundaries relaxed to data dependencies ----------
+    if sde is None:
+        return diags
+    boundaries = {lvl for i, lvl in enumerate(levels)
+                  if i > 0 and sde.layer_of(lvl) != sde.layer_of(levels[i - 1])}
+    src_parts = _tile_source_parts(tiles) if tiles is not None else None
+    part_set = ({t.part for t in tasks if t.part >= 0}
+                if parts is None else {int(p) for p in parts})
+    cross_chip = 0
+
+    for t in tasks:
+        if t.level not in boundaries:
+            continue
+        if t.role == "drain":
+            # accumulator handoff: the drain reads its OWN partition's
+            # previous-layer gather result
+            prev_lvl = levels[levels.index(t.level) - 1]
+            prod = last_d.get((prev_lvl, t.part))
+            if prod is not None and not ordered_after(t, prod.tid):
+                diags.append(Diagnostic(
+                    "ZH201", f"boundary drain not ordered after its own "
+                             f"partition's barrier {prod.label}",
+                    phase=t.level, block=t.label, origin="hazard"))
+        elif t.role == "s" and src_parts is not None:
+            # cross-tile/cross-layer read: source replicas read DRAINED
+            # previous-layer values of the partitions that produce them
+            need = {int(q) for q in src_parts[t.tile]}
+            cross_chip += len(need - part_set)
+            for q in sorted(need & part_set):
+                prod = drain_of.get((t.level, q))
+                if prod is None:
+                    diags.append(Diagnostic(
+                        "ZH201", f"no drain task for producing partition "
+                                 f"{q} at level {t.level}", phase=t.level,
+                        block=t.label, origin="hazard"))
+                elif not ordered_after(t, prod.tid):
+                    diags.append(Diagnostic(
+                        "ZH201", f"reads partition {q}'s drained values "
+                                 f"but is not ordered after {prod.label}",
+                        phase=t.level, block=t.label, origin="hazard"))
+    if cross_chip:
+        diags.append(Diagnostic(
+            "ZH206", f"{cross_chip} boundary source-partition read(s) "
+                     f"fall outside this chip's partitions; they are "
+                     f"covered by the inter-chip exchange", origin="hazard"))
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# static exchange census
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeCensus:
+    """What a sharded execution of this program must exchange.
+
+    ``events`` are the individual ``publish()`` calls the runner traces (one
+    ``jax.lax.all_gather`` each).  ``n_collectives`` counts them *after*
+    merging adjacent events with no tile work in between: a layer boundary
+    drains the gather result at the end of phase ``L`` and the dst store at
+    the start of phase ``L+1`` back to back, both reading only device-local
+    state, so XLA's all-gather combiner folds them into ONE collective in
+    the lowered HLO — exactly one per layer boundary, ``n_layers`` total.
+    """
+
+    n_collectives: int                       # merged all-gathers per forward
+    publish: FrozenSet[int]                  # vertex node ids exchanged
+    tainted: FrozenSet[int]                  # gather-tainted vertex nodes
+    #: (phase level, "dst"|"gather", ids drained by that publish call)
+    events: Tuple[Tuple[int, str, Tuple[int, ...]], ...]
+
+
+def exchange_census(sp: S.ScheduledProgram) -> ExchangeCensus:
+    """Re-derive :meth:`ShardedRunner._publish_ids` and the per-phase
+    publish calls statically from the scheduled program."""
+    tainted: Set[int] = set()
+    for seg in sp.prog.vertex_segments():
+        for n in seg.toposort():
+            if n.op == "recvInEdge" or any(i in tainted for i in n.inputs):
+                tainted.add(n.id)
+
+    node_op = {n.id: n.op for seg in sp.prog.segments
+               for n in seg.nodes.values()}
+    reads: Set[int] = set(sp.outputs)
+    for ph in sp.phases:
+        for n in ph.src.nodes:
+            reads.update(n.inputs)
+        for g in ph.gathers:
+            if g.src_value_id is not None:
+                reads.add(g.src_value_id)
+    for rnid, vnid in sp.scatter_value_of.items():
+        if node_op.get(rnid) == "recvSrc":
+            reads.add(vnid)
+    publish = ((reads & tainted) | set(sp.outputs)) \
+        - {nid for nid, _ in sp.vertex_inputs}
+
+    # replay the runner's publish() call sites in execution order; a "work"
+    # marker between two publishes keeps them in separate combiner groups
+    stream: List[object] = []
+    for ph in sp.phases:
+        drained = tuple(sorted(set(ph.dst.store_ids) & publish))
+        if drained:
+            stream.append((ph.level, "dst", drained))
+        if ph.has_tile_work:
+            stream.append("work")
+            drained = tuple(sorted(
+                {g.acc.recv_id for g in ph.gathers} & publish))
+            if drained:
+                stream.append((ph.level, "gather", drained))
+    events = tuple(ev for ev in stream if ev != "work")
+    groups = 0
+    prev_was_pub = False
+    for ev in stream:
+        if ev == "work":
+            prev_was_pub = False
+        else:
+            if not prev_was_pub:
+                groups += 1
+            prev_was_pub = True
+    return ExchangeCensus(n_collectives=groups,
+                          publish=frozenset(publish),
+                          tainted=frozenset(tainted), events=events)
+
+
+def verify_exchange(sp: S.ScheduledProgram) -> List[Diagnostic]:
+    """ZH204/ZH205: the census must come out at exactly one collective per
+    layer (the boundary drains, plus the final output drain), and nothing
+    untainted may ride the exchange (it would be recomputed locally)."""
+    census = exchange_census(sp)
+    diags: List[Diagnostic] = []
+    if census.n_collectives != sp.n_layers:
+        where = [f"phase {lvl} ({kind}: {list(ids)})"
+                 for lvl, kind, ids in census.events]
+        diags.append(Diagnostic(
+            "ZH204", f"{census.n_collectives} collective(s) after combiner "
+                     f"grouping != {sp.n_layers} layer(s): {where}",
+            origin="census"))
+    for nid in sorted(census.publish - census.tainted):
+        diags.append(Diagnostic(
+            "ZH205", f"exchanged value %{nid} is not gather-tainted; "
+                     f"source replicas could recompute it locally",
+            node=nid, origin="census"))
+    return diags

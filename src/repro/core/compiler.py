@@ -271,6 +271,10 @@ class CompiledGNN:
     ir: IR.IRProgram          # optimized
     plan: SDEPlan
     opt_report: Dict[str, int]
+    #: verify schedules as they are lowered (set from compile_gnn(verify=))
+    verify: bool = True
+    #: non-fatal findings accumulated by the verification hooks
+    diagnostics: List = dataclasses.field(default_factory=list, repr=False)
     _schedules: Dict[bool, object] = dataclasses.field(default_factory=dict,
                                                        repr=False)
 
@@ -286,7 +290,18 @@ class CompiledGNN:
 
         key = bool(kernel_dispatch)
         if key not in self._schedules:
-            self._schedules[key] = S.lower(self.plan, kernel_dispatch=key)
+            sp = S.lower(self.plan, kernel_dispatch=key)
+            if self.verify:
+                from . import analysis as A
+
+                diags = A.verify_schedule(sp)
+                errs = A.errors(diags)
+                if errs:
+                    raise A.VerificationError(
+                        diags, context=f"schedule({self.name}, "
+                                       f"kernel_dispatch={key})")
+                self.diagnostics.extend(diags)
+            self._schedules[key] = sp
         return self._schedules[key]
 
     def structure_signature(self, kernel_dispatch: bool = True):
@@ -296,10 +311,19 @@ class CompiledGNN:
         return self.schedule(kernel_dispatch).structure_signature()
 
 
-def compile_gnn(tr: TR.GnnTrace, optimize: bool = True) -> CompiledGNN:
+def compile_gnn(tr: TR.GnnTrace, optimize: bool = True,
+                verify: bool = True) -> CompiledGNN:
     """Compile a (possibly multi-layer) whole-graph trace end to end: one
     cross-layer CSE pass on the trace, one IR spanning every layer, one
-    SDE plan — engines interpret the whole stack in a single program."""
+    SDE plan — engines interpret the whole stack in a single program.
+
+    With ``verify=True`` (the default) the static IR verifier runs over the
+    optimized program — and the schedule verifier over each lowering as it
+    is produced — raising :class:`~repro.core.analysis.VerificationError`
+    on any error-severity diagnostic.  Warnings/infos accumulate on
+    ``CompiledGNN.diagnostics``.  The passes are pure graph walks (no
+    execution), so the hook is cheap enough to stay on everywhere.
+    """
     from . import passes
 
     naive = construct_ir(tr)
@@ -309,6 +333,16 @@ def compile_gnn(tr: TR.GnnTrace, optimize: bool = True) -> CompiledGNN:
         report["cse_removed"] = cse_removed
     else:
         opt, report = naive, {"e2v_moved": 0, "dce_removed": 0, "cse_removed": 0}
+    if verify:
+        from . import analysis as A
+
+        diags = A.verify_ir(opt)
+        errs = A.errors(diags)
+        if errs:
+            raise A.VerificationError(diags, context=f"compile_gnn({tr.name})")
     plan = plan_sde(opt)
-    return CompiledGNN(name=tr.name, trace=tr, naive_ir=naive, ir=opt, plan=plan,
-                       opt_report=report)
+    compiled = CompiledGNN(name=tr.name, trace=tr, naive_ir=naive, ir=opt,
+                           plan=plan, opt_report=report, verify=verify)
+    if verify:
+        compiled.diagnostics.extend(diags)
+    return compiled

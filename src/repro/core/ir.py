@@ -52,14 +52,21 @@ SEND_TO_RECV = {
 GATHER_REDUCE = {"sendDstSum": "sum", "sendDstMax": "max", "sendDstMean": "mean"}
 
 
-def op_unit(op: str) -> str:
-    """Which hardware unit executes this op (paper §7.1)."""
+def op_unit(op: str, strict: bool = False) -> str:
+    """Which hardware unit executes this op (paper §7.1).
+
+    ``strict=True`` raises on ops outside the IR vocabulary instead of
+    silently bucketing them into CTRL (the verifier's ZA001 check uses the
+    vocabulary directly; codegen paths can opt in here).
+    """
     if op in GEMM_OPS:
         return "MU"
     if op in ELW_UNARY or op in ELW_BINARY:
         return "VU"
     if op in SEND_OPS or op in RECV_OPS:
         return "VU"  # GOPs are offloaded to the Vector Unit (paper §7.1)
+    if strict and op not in ALL_OPS:
+        raise ValueError(f"op {op!r} is not in the IR vocabulary")
     return "CTRL"
 
 
@@ -135,7 +142,10 @@ class Segment:
                 if indeg[s] == 0:
                     ready.append(s)
         if len(order) != len(self.nodes):
-            raise ValueError(f"cycle in segment {self.label}")
+            # name the offending nodes, with the same wording the analyzer's
+            # ZA003 diagnostic uses (lazy import: analysis depends on ir)
+            from .analysis.diagnostics import find_cycle, format_cycle
+            raise ValueError(format_cycle(self.label, find_cycle(succs)))
         return order
 
     def sends(self) -> List[IRNode]:
@@ -181,6 +191,11 @@ class IRProgram:
                 elif n.is_recv():
                     recvs[n.comm_id] = (si, n.id)
         self.channels = {}
+        for cid, (rsi, rnid) in recvs.items():
+            if cid not in sends:
+                # an orphaned recv would read from nowhere; dropping it
+                # silently used to hide defused-GOP bugs
+                raise ValueError(f"recv comm {cid} has no send")
         for cid, (ssi, snid) in sends.items():
             if cid not in recvs:
                 raise ValueError(f"send comm {cid} has no recv")

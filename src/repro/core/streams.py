@@ -84,6 +84,14 @@ class Task:
     bytes_in: int = 0              # off-chip loads this task issues
     bytes_out: int = 0
     label: str = ""
+    # structured identity (what the label encodes) so analyses never have to
+    # parse label strings: SDE level, destination partition, flattened tile
+    # index (s/e tasks only), and the dStream role ("drain" = per-partition
+    # accumulator/drain compute, "barrier" = end-of-partition gather barrier)
+    level: int = -1
+    part: int = -1
+    tile: int = -1
+    role: str = ""                 # "s" | "e" | "drain" | "barrier"
 
 
 def instr_cycles(ins: Instr, m: int, hw: HWConfig) -> int:
@@ -215,18 +223,21 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
                               if int(ps) in d_pres and int(ps) != p]
                 st = Task(tid, "s", _bind(s_t, ns, ne, n_dst), deps=sdeps,
                           bytes_in=ns * sde.src_load_dim * by,
-                          label=f"s[{lvl}].{p}.{t}")
+                          label=f"s[{lvl}].{p}.{t}",
+                          level=lvl, part=p, tile=int(t), role="s")
                 tasks.append(st); tid += 1
                 et = Task(tid, "e", _bind(e_t, ns, ne, n_dst), deps=[st.tid],
                           bytes_in=ne * (8 + sde.edge_feat_dim * by),  # COO pair + edge feats
-                          label=f"e[{lvl}].{p}.{t}")
+                          label=f"e[{lvl}].{p}.{t}",
+                          level=lvl, part=p, tile=int(t), role="e")
                 tasks.append(et); tid += 1
                 e_tasks.append(et.tid)
             # gather barrier: next dStream step waits for all tiles of p
             barrier = Task(tid, "d", [], deps=e_tasks or [d_pre.tid],
                            bytes_out=(n_dst * sde.out_dim * by
                                       if lvl == sde.max_level - 1 or lvl == sde.max_level else 0),
-                           label=f"dbar[{lvl}].{p}")
+                           label=f"dbar[{lvl}].{p}",
+                           level=lvl, part=p, role="barrier")
             tasks.append(barrier); tid += 1
             prev_d = barrier.tid
             bar_cur[p] = barrier.tid
@@ -244,7 +255,8 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
                 deps = [prev_d] if prev_d is not None else []
             d_pre = Task(tid, "d", _bind(d_t, 0, 0, n_dst), deps=deps,
                          bytes_in=n_dst * sde.dst_load_dim * by,
-                         label=f"d[{lvl}].{p}")
+                         label=f"d[{lvl}].{p}",
+                         level=lvl, part=p, role="drain")
             tasks.append(d_pre); tid += 1
             prev_d = d_pre.tid
             bar_cur[p] = d_pre.tid

@@ -336,7 +336,9 @@ _MESH_SCRIPT = textwrap.dedent("""
             err = float(np.max(np.abs(np.asarray(got[0]) - np.asarray(ref[0])))
                         / max(1.0, float(np.max(np.abs(np.asarray(ref[0]))))))
             rec = {"model": name, "n_dev": n_dev, "rel": err}
-            if n_dev == 4:
+            if n_dev == 4 and name == "gcn":
+                # representative HLO cross-check; the per-model census is
+                # asserted statically (analysis.exchange_census) below
                 hlo = r.lower_text(inputs, params)
                 rec["collectives"] = len(re.findall(r"all-gather(?:-start)?\\(", hlo))
                 rec["n_layers"] = c.n_layers
@@ -345,12 +347,27 @@ _MESH_SCRIPT = textwrap.dedent("""
 """)
 
 
+def test_static_collective_census_per_model():
+    """Every paper model's sharded execution exchanges exactly one
+    collective per layer boundary — asserted from the program itself via
+    :func:`analysis.exchange_census`, no lowering required."""
+    from repro.core import analysis as A
+
+    for name in models.PAPER_MODELS:
+        _, c = _compiled(name, 2)
+        cen = A.exchange_census(c.schedule(False))
+        assert cen.n_collectives == c.n_layers, (name, cen.events)
+        assert not A.verify_exchange(c.schedule(False)), name
+
+
 @pytest.mark.slow
 def test_forced_mesh_conformance_and_collective_census():
     """Acceptance: all five paper models × {1,2,4,8} forced host devices
-    match the single-device PipelinedRunner to rel 1e-4, and the lowered
-    4-device program carries exactly one cross-device collective per layer
-    boundary (layer boundaries + the final output drain = n_layers)."""
+    match the single-device PipelinedRunner to rel 1e-4, and — on the
+    representative model — the HLO all-gather count agrees with the static
+    exchange census (so the two censuses can never drift apart silently)."""
+    from repro.core import analysis as A
+
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=1800)
@@ -359,9 +376,12 @@ def test_forced_mesh_conformance_and_collective_census():
     assert len(recs) == 20
     for rec in recs:
         assert rec["rel"] < REL_TOL, rec
-    for rec in recs:
-        if "collectives" in rec:
-            assert rec["collectives"] == rec["n_layers"], rec
+    checked = [rec for rec in recs if "collectives" in rec]
+    assert checked, "gcn HLO census record missing"
+    _, c = _compiled("gcn", 2)
+    static = A.exchange_census(c.schedule(False)).n_collectives
+    for rec in checked:
+        assert rec["collectives"] == static == rec["n_layers"], rec
 
 
 # The hypothesis conformance sweep lives in test_sharded_property.py (its
