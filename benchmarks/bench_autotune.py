@@ -1,0 +1,121 @@
+"""Schedule-aware tile autotuner study (ISSUE 7).
+
+For each paper model, three configurations of the sharded padded cost model
+(:func:`~repro.core.simulator.simulate_sharded`):
+
+* **scan default** — the scan-schedule incumbent on the default config
+  (8x8 grid, 4 buckets, 4 chips);
+* **kernel default** — the Pallas kernel schedule on the same config.  The
+  dense (Dmax x Smax) tile kernels are *slower* than the scan under a naive
+  config — padding dominates — which is exactly why the tuner exists;
+* **kernel tuned** — the :mod:`repro.launch.autotune` hill-climb winner
+  (grid x buckets x shard count, kernel schedule objective).
+
+The acceptance gate (asserted here, and run under ``--smoke`` in CI): the
+tuned kernel config strictly beats BOTH incumbents on all five models, on
+the power-law graphs where the dense tile kernels have work to amortize.
+Full mode adds an ungated cit-Patents-like table — at that downscale the
+heavy tail keeps gcn's one-weighted-sum scan ahead, and the table says so
+instead of hiding it.
+
+Usage::
+
+    python -m benchmarks.bench_autotune [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import compiler
+from repro.gnn import graphs, models
+from repro.launch import autotune as AT
+
+from benchmarks.common import fmt_table, write_report
+
+#: the config the rest of the bench suite uses when nothing is tuned
+DEFAULT = AT.TileConfig(n_dst_parts=8, n_src_parts=8, n_buckets=4, n_shards=4)
+
+
+def tuned_vs_default(graph, names=models.PAPER_MODELS, *, n_layers=2,
+                     dim=16, start=DEFAULT, max_evals=32, max_shards=8):
+    """Per model: both incumbent costs + the tuned winner (one row each)."""
+    rows = []
+    for name in names:
+        c = compiler.compile_gnn(
+            models.trace_stacked(name, n_layers, dim, dim, dim))
+        scan = AT.padded_cost(c, graph, start, kernel_dispatch=False)
+        kern = AT.padded_cost(c, graph, start, kernel_dispatch=True)
+        trials = AT.hillclimb(c, graph, start, max_evals=max_evals,
+                              max_shards=max_shards)
+        best = trials[0]
+        incumbent = min(scan.cycles, kern.cycles)
+        rows.append(dict(
+            model=name, scan_default=scan.cycles, kernel_default=kern.cycles,
+            kernel_tuned=best.cycles, config=best.config.to_dict(),
+            n_evals=len(trials),
+            speedup_vs_best=round(incumbent / best.cycles, 3)))
+    return rows
+
+
+def assert_tuned_wins(rows):
+    """ISSUE 7 acceptance: tuned+kernel beats the best incumbent (scan
+    default AND untuned kernel) on every model in the table."""
+    losers = [r["model"] for r in rows
+              if r["kernel_tuned"] >= min(r["scan_default"],
+                                          r["kernel_default"])]
+    assert not losers, \
+        f"tuned kernel config loses to an incumbent on: {losers}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small power-law graph + fewer simulator evals (CI)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        g = graphs.random_graph(400, 2000, seed=1, model="powerlaw",
+                                n_edge_types=3)
+        graph_label, max_evals = "powerlaw-400", 32
+    else:
+        g = graphs.random_graph(2000, 10000, seed=1, model="powerlaw",
+                                n_edge_types=3)
+        graph_label, max_evals = "powerlaw-2000", 64
+
+    def show(label, rows):
+        print(f"== autotuned kernel dispatch vs incumbents ({label}, "
+              "2-layer, padded cycles) ==")
+        print(fmt_table(
+            [[r["model"], r["scan_default"], r["kernel_default"],
+              r["kernel_tuned"],
+              "x".join(str(v)
+                       for v in AT.TileConfig.from_dict(r["config"]).key()),
+              f"{r['speedup_vs_best']}x", r["n_evals"]] for r in rows],
+            ["model", "scan_default", "kernel_default", "kernel_tuned",
+             "tuned_cfg", "vs_best", "evals"]))
+
+    rows = tuned_vs_default(g, max_evals=max_evals)
+    assert_tuned_wins(rows)
+    show(graph_label, rows)
+
+    cit_rows = None
+    if not args.smoke:
+        # informational (NOT gated): on the sparsest real-graph downscales
+        # the heavy-tail partition density keeps the dense tile kernels
+        # behind gcn's single weighted-sum scan — the win-everywhere regime
+        # is the power-law tables above
+        cit = graphs.paper_graph("cit-Patents", scale=0.001, seed=0,
+                                 n_edge_types=3)
+        cit_rows = tuned_vs_default(cit, max_evals=max_evals)
+        print()
+        show("cit-Patents-like, ungated", cit_rows)
+
+    path = write_report("bench_autotune", {
+        "graph": graph_label, "default": DEFAULT.to_dict(),
+        "rows": rows, "cit_patents_rows": cit_rows, "smoke": args.smoke,
+    })
+    print(f"\nreport: {path}")
+
+
+if __name__ == "__main__":
+    main()

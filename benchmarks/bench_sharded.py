@@ -1,6 +1,6 @@
 """Sharded-execution scaling benchmark (ISSUE 5).
 
-Two axes, one report (``reports/bench_sharded.json``):
+Three axes, one report (``reports/bench_sharded.json``):
 
 * **host-device scaling** — the real :class:`~repro.core.pipeline
   .ShardedRunner` wall clock on {1, 2, 4, 8} forced host devices.  The
@@ -13,6 +13,9 @@ Two axes, one report (``reports/bench_sharded.json``):
   (:func:`~repro.core.simulator.simulate_sharded`) for all five paper
   models on the cit-Patents-like configuration: per-chip cycles, exchange
   traffic, and the scaling curve over {1, 2, 4, 8} chips.
+* **autotuned kernel dispatch** — tuned grid/bucket/shard config for the
+  Pallas kernel schedule vs the scan-sharded and untuned-kernel incumbents
+  (:mod:`benchmarks.bench_autotune`); asserted to win on all five models.
 
 Usage::
 
@@ -121,6 +124,21 @@ def run_chip_scaling(smoke: bool):
     return out
 
 
+def run_autotuned(smoke: bool):
+    """Tuned kernel dispatch vs the scan-sharded / untuned-kernel
+    incumbents (padded cycles, all five models) — the ISSUE 7 acceptance
+    row set, asserted via :func:`benchmarks.bench_autotune.assert_tuned_wins`."""
+    from repro.gnn import graphs
+
+    from benchmarks.bench_autotune import assert_tuned_wins, tuned_vs_default
+
+    v, e = (400, 2000) if smoke else (2000, 10000)
+    g = graphs.random_graph(v, e, seed=1, model="powerlaw", n_edge_types=3)
+    rows = tuned_vs_default(g, max_evals=24 if smoke else 48)
+    assert_tuned_wins(rows)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -135,6 +153,14 @@ def main(argv=None):
     print("simulated chip scaling (2-layer, cit-Patents-like, speedup vs 1 chip)")
     print(fmt_table(rows, ["model"] + [f"{k}ch" for k in CHIP_COUNTS]))
 
+    tuned = run_autotuned(args.smoke)
+    print("\nautotuned kernel dispatch vs incumbents (power-law, padded cycles)")
+    print(fmt_table([[r["model"], r["scan_default"], r["kernel_default"],
+                      r["kernel_tuned"], f"{r['speedup_vs_best']}x"]
+                     for r in tuned],
+                    ["model", "scan_default", "kernel_default",
+                     "kernel_tuned", "vs_best"]))
+
     devices = None
     if not args.skip_devices:
         devices = run_device_scaling(args.smoke)
@@ -145,7 +171,7 @@ def main(argv=None):
 
     path = write_report("bench_sharded", {
         "chip_scaling": chips, "device_scaling": devices,
-        "smoke": args.smoke,
+        "autotuned": tuned, "smoke": args.smoke,
     })
     print(f"\nreport: {path}")
 

@@ -48,8 +48,10 @@ def analyze_matrix(names: List[str], layer_counts: List[int], dim: int,
             for dispatch in (True, False):
                 sp = c.schedule(kernel_dispatch=dispatch)
                 diags += A.verify_schedule(sp)
-                if dispatch:
-                    diags += A.verify_exchange(sp)
+                # ShardedRunner executes either schedule variant, so the
+                # exchange census must hold for both: exactly n_layers
+                # gather-tainted collectives, kernels on or off
+                diags += A.verify_exchange(sp)
             if with_task_graphs:
                 ts = tiling.grid_tile(g, 4, 4, sparse=True)
                 sde = isa.emit_sde(c.schedule(True))

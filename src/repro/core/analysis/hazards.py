@@ -14,7 +14,11 @@ tile's source vertices and demands exactly those drains as ancestors.
 derivation (gather-tainted tile-side reads) *statically* from the
 :class:`ScheduledProgram` and counts the collectives a sharded execution
 must issue — exactly ``n_layers`` for the paper models — replacing the
-regex-over-HLO census as the first-line check.
+regex-over-HLO census as the first-line check.  The derivation covers both
+schedule variants: kernel gathers drain into the same per-phase ``publish``
+call as scan gathers (their ``src_value_id`` tile reads and receive
+accumulators enter ``reads`` identically), so the census invariant holds
+with Pallas kernel dispatch on or off.
 """
 from __future__ import annotations
 

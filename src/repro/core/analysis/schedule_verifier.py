@@ -7,8 +7,12 @@ preconditions are re-derived here, never trusted from
 ``_match_softmax_motifs`` / ``_classify_gather``), and the
 published-before-read dataflow contract every engine relies on.  Also home
 of the **missed-kernel lint** (ZS110): for every scan-fallback gather under
-``kernel_dispatch=True`` it explains *why* pattern matching failed — the
-observability hook the autotuning roadmap item needs.
+``kernel_dispatch=True`` it explains *why* pattern matching failed.  The
+lint is schedule-level, so it covers every engine that executes the
+kernel-dispatch variant — :class:`~repro.core.pipeline.PipelinedRunner` and
+the sharded ``shard_map`` path alike — and feeds the
+:mod:`repro.launch.autotune` search, which only tunes schedules whose
+gathers actually kernelized.
 """
 from __future__ import annotations
 

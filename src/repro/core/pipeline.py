@@ -462,19 +462,40 @@ def _shard_tile_counts(tiles, plan: ShardPlan) -> List[List[int]]:
     return out
 
 
+def _source_tileset(tiles) -> TileSet:
+    return tiles.source if isinstance(tiles, BucketedTileSet) else tiles
+
+
+def _shard_real_counts(ts: TileSet, plan: ShardPlan) -> List[int]:
+    shard = plan.shard_of_part[ts.part_id]
+    real = ts.n_edge > 0
+    return [int(np.sum(real & (shard == k))) for k in range(plan.n_shards)]
+
+
 def shard_layout_signature(tiles, n_devices: int, mode: str = "cost",
-                           quantize_tile_cap: bool = False) -> Tuple:
+                           quantize_tile_cap: bool = False,
+                           kernel_dispatch: bool = False,
+                           kernels: Tuple[str, ...] = ()) -> Tuple:
     """Shape identity of the sharded execution layout — everything a
     :class:`ShardedRunner` compilation depends on beyond the program and
     tile-set signatures.  Cheap (pure numpy); the serving engine calls it
     per request to key the program cache, so two requests share a warm
-    sharded runner iff their shard layouts realize identical shapes."""
+    sharded runner iff their shard layouts realize identical shapes.
+
+    ``kernel_dispatch`` (and, when it is on, the program's kernel tags) is
+    part of the identity: a scan-scheduled compilation must never alias a
+    kernel-dispatched one, and the segment-softmax kernel adds a per-shard
+    capacity for the unbucketed tile batch that scan programs don't have."""
     plan = plan_shards(tiles, n_devices, mode=mode)
     caps = []
     for counts in _shard_tile_counts(tiles, plan):
         cap = max(1, max(counts))
         caps.append(_quantize_cap(cap) if quantize_tile_cap else cap)
-    return ("shardlayout", n_devices, mode, plan.n_local_parts, tuple(caps))
+    if kernel_dispatch and S.KERNEL_SEGMENT_SOFTMAX in kernels:
+        cap0 = max(1, max(_shard_real_counts(_source_tileset(tiles), plan)))
+        caps.append(_quantize_cap(cap0) if quantize_tile_cap else cap0)
+    return ("shardlayout", n_devices, mode, plan.n_local_parts, tuple(caps),
+            bool(kernel_dispatch))
 
 
 def _shard_partition_ids(plan: ShardPlan, part_start: np.ndarray,
@@ -491,7 +512,8 @@ def _shard_partition_ids(plan: ShardPlan, part_start: np.ndarray,
     return ids
 
 
-def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool
+def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool,
+                  kernels: frozenset = frozenset()
                   ) -> Tuple[Dict, Dict, Tuple]:
     """Build the per-device operand arrays for a sharded run.
 
@@ -500,23 +522,32 @@ def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool
     replicated tables.  Per bucket, each shard receives its partitions' real
     tiles in the bucket's partition-major order (bucket order preserved) and
     is padded to a common capacity with zero-edge filler rows the scan masks
-    out.  All shapes are a pure function of the tile-set signature, the plan
-    shape, and the caps — :meth:`ShardedRunner.bind` rebuilds them for any
-    structurally-identical tile set.
+    out.  Filler rows repeat the shard's last real ``part_id``/``local_pid``
+    (:func:`~repro.core.tiling.pad_tileset`'s convention), so under the
+    Pallas FIRST/LAST flag protocol they extend that partition's run with
+    zero blocks instead of corrupting another partition's accumulator.
+
+    When ``kernels`` names Pallas gather blocks, each bucket additionally
+    carries the per-shard kernel constants — FIRST/LAST ``flags`` over the
+    local-partition sequence, the local-slot presence mask ``pmask``, and
+    (pure SpMM only) the stacked dense adjacency blocks ``adj`` — and a
+    ``softmax`` entry lays out the *unbucketed* tile batch per shard for the
+    segment-softmax kernel (online-softmax state cannot be merged across
+    buckets).  All shapes are a pure function of the tile-set signature, the
+    plan shape, and the caps — :meth:`ShardedRunner.bind` rebuilds them for
+    any structurally-identical tile set.
     """
+    from ..kernels.tile_spmm.kernel import tile_flags
+    from ..kernels.tile_spmm.ops import densify_tiles
+
     buckets: List[TileSet] = (list(tiles.buckets)
                               if isinstance(tiles, BucketedTileSet) else [tiles])
-    K = plan.n_shards
+    K, P_loc = plan.n_shards, plan.n_local_parts
     dmax = int(tiles.part_size.max())
     counts = _shard_tile_counts(tiles, plan)
+    want_kernels = bool(kernels & set(S.PALLAS_KERNELS))
 
-    bucket_ops = []
-    caps = []
-    for b, cnts in zip(buckets, counts):
-        cap = max(1, max(cnts))
-        if quantize_tile_cap:
-            cap = _quantize_cap(cap)
-        caps.append(cap)
+    def shard_stack(b: TileSet, cap: int, adj_np: Optional[np.ndarray]) -> Dict:
         shard = plan.shard_of_part[b.part_id]
         sel_of = [np.nonzero((shard == k) & (b.n_edge > 0))[0]
                   for k in range(K)]
@@ -527,16 +558,50 @@ def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool
                 out[k, :len(sel)] = a[sel]
             return out
 
-        bucket_ops.append(dict(
+        ops = dict(
             src_ids=stack(b.src_ids), edge_src=stack(b.edge_src),
             edge_dst=stack(b.edge_dst), edge_gid=stack(b.edge_gid),
             n_edge=stack(b.n_edge), part_id=stack(b.part_id),
             local_pid=stack(plan.local_slot_of_part[b.part_id].astype(np.int32)),
-        ))
+        )
+        # filler rows extend the last real partition run (see docstring)
+        for k, sel in enumerate(sel_of):
+            if 0 < len(sel) < cap:
+                ops["part_id"][k, len(sel):] = ops["part_id"][k, len(sel) - 1]
+                ops["local_pid"][k, len(sel):] = ops["local_pid"][k, len(sel) - 1]
+        if want_kernels:
+            flags = np.zeros((K, cap), np.int32)
+            pmask = np.zeros((K, P_loc), np.float32)
+            for k, sel in enumerate(sel_of):
+                flags[k] = tile_flags(ops["local_pid"][k])
+                pmask[k, ops["local_pid"][k, :len(sel)]] = 1.0
+            ops["flags"] = flags
+            ops["pmask"] = pmask
+            if adj_np is not None:
+                ops["adj"] = stack(adj_np)
+        return ops
+
+    bucket_ops = []
+    caps = []
+    for b, cnts in zip(buckets, counts):
+        cap = max(1, max(cnts))
+        if quantize_tile_cap:
+            cap = _quantize_cap(cap)
+        caps.append(cap)
+        adj_np = densify_tiles(b)[0] if (want_kernels and
+                                         S.KERNEL_SPMM in kernels) else None
+        bucket_ops.append(shard_stack(b, cap, adj_np))
 
     pad_ids = _shard_partition_ids(plan, tiles.part_start, tiles.part_size,
                                    dmax, tiles.n_vertices)
     shard_ops = {"pad_ids": pad_ids, "buckets": bucket_ops}
+    if want_kernels and S.KERNEL_SEGMENT_SOFTMAX in kernels:
+        st = _source_tileset(tiles)
+        cap0 = max(1, max(_shard_real_counts(st, plan)))
+        if quantize_tile_cap:
+            cap0 = _quantize_cap(cap0)
+        caps.append(cap0)
+        shard_ops["softmax"] = shard_stack(st, cap0, None)
     repl_ops = {"full_pad_ids": pad_ids.reshape(-1).copy()}
     return shard_ops, repl_ops, tuple(caps)
 
@@ -553,10 +618,17 @@ class ShardedRunner:
     boundary (values read back through destination replicas — GAT's softmax
     ``recvDst`` statistics, for instance — never leave their device).
 
-    The program is lowered with ``kernel_dispatch=False`` (the pure
-    multi-phase scan schedule): Pallas kernel dispatch inside ``shard_map``
-    is future work, and the scan path is numerically identical to the
-    single-device scan engine.  On CPU, force a multi-device mesh with
+    ``kernel_dispatch`` selects the scheduled program variant exactly as in
+    :class:`PipelinedRunner`: ``True`` routes pattern-matched gather blocks
+    through the Pallas kernels *inside* ``shard_map`` — each shard runs its
+    bucketed tile batch through ``pallas_spmm`` / ``pallas_spmm_weighted`` /
+    ``pallas_segment_softmax`` with device-local partition slots
+    (``n_parts = P_loc``), so kernel outputs land straight in the local
+    pstore and the one-all-gather-per-layer-boundary exchange census is
+    unchanged.  ``False`` (the default when no ``tile_kernel`` is given)
+    interprets the pure multi-phase scan schedule; both variants are
+    numerically conformant with the single-device engines.  On CPU, force a
+    multi-device mesh with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
     first jax import.
 
@@ -572,7 +644,11 @@ class ShardedRunner:
     def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles,
                  n_devices: Optional[int] = None, *, mode: str = "cost",
                  quantize_tile_cap: bool = False,
-                 devices: Optional[List] = None):
+                 devices: Optional[List] = None,
+                 tile_kernel: Optional[Callable] = None,
+                 kernel_dispatch: Optional[bool] = None):
+        from ..kernels.tile_spmm import ops as tops
+
         devices = list(devices) if devices is not None else list(jax.devices())
         if n_devices is None:
             n_devices = len(devices)
@@ -581,20 +657,28 @@ class ShardedRunner:
                 f"n_devices={n_devices} but only {len(devices)} jax devices "
                 "are visible; on CPU set XLA_FLAGS="
                 "--xla_force_host_platform_device_count=N before importing jax")
+        if kernel_dispatch is None:
+            kernel_dispatch = tile_kernel is not None
         self.c = compiled
-        self.sp: S.ScheduledProgram = compiled.schedule(False)
+        self.kernel_dispatch = bool(kernel_dispatch)
+        self.sp: S.ScheduledProgram = compiled.schedule(self.kernel_dispatch)
         self.graph = graph
         self.tiles = tiles
         self.mode = mode
         self.quantize_tile_cap = quantize_tile_cap
         self.n_devices = n_devices
+        self.tile_kernel = tile_kernel if tile_kernel is not None else tops.spmm
+        self.softmax_kernel = tops.gat_aggregate
+        self._kernels = frozenset(g.kernel for ph in self.sp.phases
+                                  for g in ph.gathers)
         self.plan = plan_shards(tiles, n_devices, mode=mode)
         self.dmax = int(tiles.part_size.max())
         self._ops_np, self._repl_np, self.caps = _shard_layout(
-            tiles, self.plan, quantize_tile_cap)
+            tiles, self.plan, quantize_tile_cap, self._kernels)
         self._publish = self._publish_ids()
         self._signature = ("sharded", n_devices, mode, self.plan.n_local_parts,
-                           self.caps, self.sp.structure_signature(),
+                           self.caps, self.kernel_dispatch,
+                           self.sp.structure_signature(),
                            tiles.shape_signature())
         self.mesh = jax.sharding.Mesh(np.asarray(devices[:n_devices]),
                                       ("shards",))
@@ -672,7 +756,8 @@ class ShardedRunner:
             raise ValueError(
                 f"shard layout mismatch: {plan.n_local_parts} local "
                 f"partition slots != {self.plan.n_local_parts}")
-        ops, repl, caps = _shard_layout(tiles, plan, self.quantize_tile_cap)
+        ops, repl, caps = _shard_layout(tiles, plan, self.quantize_tile_cap,
+                                        self._kernels)
         if caps != self.caps:
             raise ValueError(
                 f"shard tile capacities changed: {caps} != {self.caps}")
@@ -710,7 +795,16 @@ class ShardedRunner:
         return lowered.compile().as_text()
 
     # ---------------------------------------------------------- trace-time
+    #: per-tile operand keys of the lax.scan body (kernel constants like
+    #: ``pmask``/``adj`` ride in the same bucket dicts but must not be
+    #: scanned over — their leading axis is not the tile capacity)
+    _SCAN_KEYS = ("src_ids", "edge_src", "edge_dst", "edge_gid",
+                  "n_edge", "part_id", "local_pid")
+
     def _run(self, inputs, params, ops, repl) -> List[Array]:
+        from ..kernels.tile_spmm.ops import (densify_edge_scores,
+                                             densify_edge_weights)
+
         sp = self.sp
         V = self.graph.n_vertices
         K, P_loc, dmax = self.n_devices, self.plan.n_local_parts, self.dmax
@@ -799,6 +893,17 @@ class ShardedRunner:
                                                [elookup(i) for i in n.inputs])
             return eenv, elookup
 
+        def src_value(senv, nid, rows):
+            return senv[nid] if nid in senv else vstore[nid][rows]
+
+        def local(ta, keys):
+            """Strip the mesh axis off this shard's slice of ``ta`` and
+            derive global destination rows from the partition table."""
+            xs = {k: ta[k][0] for k in keys}
+            xs["dst_global"] = jnp.minimum(
+                part_start[xs["part_id"]][:, None] + xs["edge_dst"], V - 1)
+            return xs
+
         for phase in sp.phases:
             # ---- destination block on the local partitions, then ONE
             # exchange of whatever this boundary drains to tile-side readers
@@ -813,34 +918,89 @@ class ShardedRunner:
             if not phase.has_tile_work:
                 continue
 
-            scan_gathers = phase.scan_gathers()  # kernel_dispatch=False: all
+            scan_gathers = phase.scan_gathers()
             acc = _init_gather_acc(scan_gathers, P_loc, dmax)
-
-            def body(acc, xs):
-                emask = (jnp.arange(xs["edge_src"].shape[0])
-                         < xs["n_edge"])[:, None]
-                pid = xs["local_pid"]
-                senv = eval_vertex(xs["src_ids"], phase.src.nodes)
-                _, elookup = edge_env(phase.edge.nodes, xs, senv)
-                edst = xs["edge_dst"]
-                for g in scan_gathers:
-                    _gather_accumulate(acc, g, elookup(g.acc.value_id),
-                                       emask, edst, pid, dmax)
-                return acc, 0
-
-            for ta in ops["buckets"]:
-                xs = {k: v[0] for k, v in ta.items()}
-                xs["dst_global"] = jnp.minimum(
-                    part_start[xs["part_id"]][:, None] + xs["edge_dst"], V - 1)
-                acc, _ = jax.lax.scan(body, acc, xs)
-
-            # ---- gather results stay local; exchange only tile-side reads
             pending = {}
-            for g in scan_gathers:
-                val = _drain_gather_acc(acc, g)
+
+            def drain(g, val):
+                """Gather result stays in the device-local padded store;
+                queued for this phase's single exchange only when a
+                tile-side path reads it."""
                 pstore[g.acc.recv_id] = val
                 if g.acc.recv_id in self._publish:
                     pending[g.acc.recv_id] = val
+
+            # ---- kernel-dispatched gather blocks (device-local slots)
+            for g in phase.kernel_gathers():
+                if g.kernel == S.KERNEL_SEGMENT_SOFTMAX:
+                    sm = ops["softmax"]
+                    xs0 = local(sm, self._SCAN_KEYS)
+
+                    def tile_se(xs):
+                        senv = eval_vertex(xs["src_ids"], phase.src.nodes)
+                        _, elookup = edge_env(g.edge_nodes, xs, senv)
+                        h = src_value(senv, g.src_value_id, xs["src_ids"])
+                        return elookup(g.score_id)[:, 0], h[xs["edge_src"]]
+
+                    scores_e, vals = jax.vmap(tile_se)(xs0)
+                    scores = densify_edge_scores(
+                        scores_e, xs0["edge_dst"], xs0["n_edge"], dmax=dmax)
+                    out = self.softmax_kernel(scores, vals, xs0["local_pid"],
+                                              sm["flags"][0], n_parts=P_loc)
+                    out = jnp.where(sm["pmask"][0][:, None, None] > 0,
+                                    out, 0.0)
+                    drain(g, out)
+                    continue
+
+                # SpMM variants: one densified kernel call per size bucket,
+                # local-slot outputs summed into one (P_loc, Dmax, F) buffer
+                total = jnp.zeros((P_loc, dmax, g.acc.dim), jnp.float32)
+                for ta in ops["buckets"]:
+                    xs = local(ta, self._SCAN_KEYS)
+                    senv = eval_vertex(xs["src_ids"], phase.src.nodes)
+                    xsrc = src_value(senv, g.src_value_id, xs["src_ids"])
+                    if g.kernel == S.KERNEL_SPMM:
+                        adj = ta["adj"][0]
+                    else:    # weighted: densify the runtime edge weights
+                        def tile_w(x):
+                            senv_t = eval_vertex(x["src_ids"], phase.src.nodes)
+                            _, elookup = edge_env(g.edge_nodes, x, senv_t)
+                            return elookup(g.weight_id)[:, 0]
+
+                        w = jax.vmap(tile_w)(xs)
+                        adj = densify_edge_weights(
+                            w, xs["edge_dst"], xs["edge_src"], xs["n_edge"],
+                            dmax=dmax, smax=int(xs["src_ids"].shape[1]))
+                    out = self.tile_kernel(adj, xsrc, xs["local_pid"],
+                                           ta["flags"][0], n_parts=P_loc)
+                    # local slots with no tile in this bucket are never
+                    # written by the kernel (uninitialized, may be NaN)
+                    total = total + jnp.where(
+                        ta["pmask"][0][:, None, None] > 0, out, 0.0)
+                drain(g, total)
+
+            # ---- the pipelined tile loop, one scan per bucket
+            if scan_gathers:
+                def body(acc, xs):
+                    emask = (jnp.arange(xs["edge_src"].shape[0])
+                             < xs["n_edge"])[:, None]
+                    pid = xs["local_pid"]
+                    senv = eval_vertex(xs["src_ids"], phase.src.nodes)
+                    _, elookup = edge_env(phase.edge.nodes, xs, senv)
+                    edst = xs["edge_dst"]
+                    for g in scan_gathers:
+                        _gather_accumulate(acc, g, elookup(g.acc.value_id),
+                                           emask, edst, pid, dmax)
+                    return acc, 0
+
+                for ta in ops["buckets"]:
+                    acc, _ = jax.lax.scan(body, acc,
+                                          local(ta, self._SCAN_KEYS))
+                for g in scan_gathers:
+                    drain(g, _drain_gather_acc(acc, g))
+
+            # everything this phase's gathers drain to tile-side readers
+            # leaves in ONE collective (the static census counts on it)
             publish(pending)
 
         return [vstore[o] for o in sp.outputs]
@@ -848,7 +1008,9 @@ class ShardedRunner:
 
 def run_sharded(compiled: C.CompiledGNN, graph: Graph, tiles,
                 inputs: Dict[str, Array], params: Dict[str, Array],
-                n_devices: Optional[int] = None,
-                mode: str = "cost") -> List[Array]:
-    return ShardedRunner(compiled, graph, tiles, n_devices,
-                         mode=mode)(inputs, params)
+                n_devices: Optional[int] = None, mode: str = "cost",
+                tile_kernel: Optional[Callable] = None,
+                kernel_dispatch: Optional[bool] = None) -> List[Array]:
+    return ShardedRunner(compiled, graph, tiles, n_devices, mode=mode,
+                         tile_kernel=tile_kernel,
+                         kernel_dispatch=kernel_dispatch)(inputs, params)

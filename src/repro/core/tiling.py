@@ -311,8 +311,12 @@ def bucket_tiles(tiles: TileSet, n_buckets: int = 4,
     """Post-pass: bin tiles by size so each bin pads to its own maxima.
 
     Tiles are sorted by (n_edge, n_src) and split into ``n_buckets``
-    contiguous equal-count bins (duplicate boundaries collapse, so fewer,
-    larger bins come out when the size distribution is flat).  Within a bin
+    contiguous equal-count bins.  The realized bucket count is exactly
+    ``min(n_buckets, n_tiles)`` — the bin bounds are strictly increasing by
+    construction (every bin gets at least one tile), never collapsed through
+    rounding or dedup, so a config sweep over ``n_buckets`` (the autotuner)
+    maps each requested count onto a distinct, deterministic layout and
+    cache keys derived from the bucket shapes stay stable.  Within a bin
     tiles are ordered partition-major, heaviest first per partition —
     deterministic, and load-balanced for the multi-stream schedule.
     """
@@ -322,7 +326,11 @@ def bucket_tiles(tiles: TileSet, n_buckets: int = 4,
                                tile_index=[np.empty(0, np.int64)], source=tiles)
     n_buckets = max(1, min(n_buckets, T))
     order = np.lexsort((tiles.n_src, tiles.n_edge))  # (n_edge, n_src) asc
-    bounds = np.unique(np.linspace(0, T, n_buckets + 1).round().astype(np.int64))
+    # i-th bound = i*T//n: strictly increasing whenever T >= n_buckets
+    # (guaranteed by the cap above), unlike round()+unique which can merge
+    # near-uniform splits and silently change the realized bucket count
+    bounds = (np.arange(n_buckets + 1, dtype=np.int64) * T) // n_buckets
+    assert len(np.unique(bounds)) == n_buckets + 1
 
     buckets: List[TileSet] = []
     index: List[np.ndarray] = []
@@ -335,6 +343,26 @@ def bucket_tiles(tiles: TileSet, n_buckets: int = 4,
         buckets.append(_repack(tiles, sel, pad_multiple))
         index.append(sel)
     return BucketedTileSet(buckets=buckets, tile_index=index, source=tiles)
+
+
+def quantize_buckets(bt: BucketedTileSet,
+                     pad_multiple: int = 8) -> BucketedTileSet:
+    """Snap each bucket's column maxima (s_max, e_max) up to powers of two.
+
+    Bucket row counts are already deterministic per tile count (see
+    :func:`bucket_tiles`), so after this pass the whole bucketed shape
+    signature is a step function of the size class — structurally-similar
+    serving requests that tile and bucket slightly differently still land
+    on one compiled sharded program.  Tile order and ``tile_index`` are
+    unchanged (only columns grow)."""
+    def q(n: int) -> int:
+        n = max(int(n), pad_multiple)
+        return 1 << (n - 1).bit_length()
+
+    buckets = [pad_tileset(b, b.n_tiles, q(b.s_max), q(b.e_max))
+               for b in bt.buckets]
+    return BucketedTileSet(buckets=buckets, tile_index=list(bt.tile_index),
+                           source=bt.source)
 
 
 def pad_tileset(tiles: TileSet, n_tiles: int, s_max: int, e_max: int) -> TileSet:

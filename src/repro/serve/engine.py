@@ -23,8 +23,10 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..core import compiler as C
+from ..core import schedule as S
 from ..core.pipeline import (PipelinedRunner, ShardedRunner,
                              shard_layout_signature)
+from ..core.tiling import bucket_tiles, quantize_buckets
 from ..gnn import models as M
 from ..gnn.graphs import Graph, batch_graphs
 from .cache import ProgramCache
@@ -57,10 +59,19 @@ class InferenceServer:
     :class:`~repro.core.pipeline.ShardedRunner` over an N-device mesh
     (contiguous partition assignment + power-of-two per-shard tile caps, so
     structurally-similar requests share one compiled shape).  The cache key
-    then carries the device count and realized shard layout: a sharded
-    program can never alias a single-device one, nor a different mesh size.
-    Sharded programs run the pure scan schedule (``kernel_dispatch`` applies
-    only to the single-device route).
+    then carries the device count, the realized shard layout, and the
+    ``kernel_dispatch`` flag: a sharded program can never alias a
+    single-device one, a different mesh size, or a scan-scheduled variant.
+    Both routes honor ``kernel_dispatch`` — sharded requests run the Pallas
+    gather blocks inside ``shard_map`` when it is on.
+
+    ``tune_cache`` (a :class:`~repro.launch.autotune.TuneCache`) routes size
+    classes with a tuned entry onto the tuned tile config: the tuned grid
+    replaces :func:`~repro.serve.signature.serving_grid`, the canonical tile
+    batch is size-bucketed (bucket maxima snapped to powers of two for shape
+    stability), and the tuned shard count caps the mesh size.  Tuned and
+    default registrations/cache keys never alias — both carry the tuned
+    config key.
     """
 
     def __init__(self, model: Union[str, C.CompiledGNN],
@@ -69,7 +80,8 @@ class InferenceServer:
                  cache_capacity: int = 32, target_part: int = 256,
                  donate_inputs: Optional[bool] = None,
                  shard_devices: Optional[int] = None,
-                 shard_min_vertices: int = 2048):
+                 shard_min_vertices: int = 2048,
+                 tune_cache=None):
         if isinstance(model, str):
             self.compiled = C.compile_gnn(
                 M.trace_named(model) if n_layers == 1
@@ -102,6 +114,11 @@ class InferenceServer:
                     "before importing jax")
         self.shard_devices = shard_devices
         self.shard_min_vertices = shard_min_vertices
+        self.tune_cache = tune_cache
+        sp = self.compiled.schedule(self.kernel_dispatch)
+        self._kernel_tags = tuple(sorted(
+            {g.kernel for ph in sp.phases for g in ph.gathers}
+            - {S.KERNEL_SCAN}))
         self.cache = ProgramCache(capacity=cache_capacity)
         self.shapes = ShapeRegistry(target_part=target_part)
         self._requests = 0
@@ -172,8 +189,27 @@ class InferenceServer:
         # must never alias, even if two servers share a registry
         class_key = (self.compiled.name, self.compiled.n_layers,
                      size_class(graphs[0]), quantize(len(graphs), floor=1))
-        merged_graph, tiles, E_pad = self.shapes.canonical(class_key,
-                                                           batch.graph)
+        tuned = None
+        if self.tune_cache is not None:
+            from ..launch.autotune import program_key
+            tuned = self.tune_cache.get(
+                program_key(self.compiled, self.kernel_dispatch), class_key)
+        if tuned is not None:
+            # tuned route: tuned grid + size-bucketed tile batch; the
+            # registration key carries the config so default and tuned
+            # canonical shapes of one class never alias
+            tuned_key = ("tuned",) + tuned.key()
+            merged_graph, tiles, E_pad = self.shapes.canonical(
+                class_key + (tuned_key,), batch.graph,
+                grid=(tuned.n_dst_parts, tuned.n_src_parts))
+            if tuned.n_buckets > 1:
+                tiles = quantize_buckets(
+                    bucket_tiles(tiles, tuned.n_buckets),
+                    self.shapes.pad_multiple)
+        else:
+            tuned_key = ()
+            merged_graph, tiles, E_pad = self.shapes.canonical(class_key,
+                                                               batch.graph)
         V_pad = merged_graph.n_vertices
 
         sp = self.compiled.schedule(self.kernel_dispatch)
@@ -188,20 +224,29 @@ class InferenceServer:
         n_dev = (self.shard_devices
                  if self.shard_devices and self.shard_devices > 1
                  and V_pad >= self.shard_min_vertices else 1)
+        if tuned is not None and n_dev > 1:
+            # the tuned shard count caps (never raises) the mesh size
+            n_dev = max(1, min(n_dev, tuned.n_shards))
         if n_dev > 1:
-            # sharded route: the scan-schedule program over an n_dev mesh;
-            # key carries the mesh size + realized shard layout shapes
-            key = structure_signature(self.compiled, tiles, E_pad, False) + (
+            # sharded route over an n_dev mesh, kernel dispatch honored
+            # inside shard_map; key carries the mesh size, the realized
+            # shard layout, the dispatch flag, and the tuned config
+            key = structure_signature(self.compiled, tiles, E_pad,
+                                      self.kernel_dispatch) + (
                 shard_layout_signature(tiles, n_dev, mode="contiguous",
-                                       quantize_tile_cap=True),)
+                                       quantize_tile_cap=True,
+                                       kernel_dispatch=self.kernel_dispatch,
+                                       kernels=self._kernel_tags),
+                tuned_key)
             runner = self.cache.get_or_build(
                 key, lambda: ShardedRunner(self.compiled, merged_graph, tiles,
                                            n_dev, mode="contiguous",
-                                           quantize_tile_cap=True))
+                                           quantize_tile_cap=True,
+                                           kernel_dispatch=self.kernel_dispatch))
             self._sharded_batches += 1
         else:
             key = structure_signature(self.compiled, tiles, E_pad,
-                                      self.kernel_dispatch)
+                                      self.kernel_dispatch) + (tuned_key,)
             runner = self.cache.get_or_build(
                 key, lambda: PipelinedRunner(self.compiled, merged_graph, tiles,
                                              kernel_dispatch=self.kernel_dispatch,

@@ -22,7 +22,7 @@ across a stream of similar-but-not-identical graphs:
 from __future__ import annotations
 
 import math
-from typing import Dict, Hashable, Tuple, Union
+from typing import Dict, Hashable, Optional, Tuple, Union
 
 from ..core import compiler as C
 from ..core.tiling import BucketedTileSet, TileSet, grid_tile, pad_tileset
@@ -95,10 +95,14 @@ class ShapeRegistry:
     def __len__(self) -> int:
         return len(self._shapes)
 
-    def canonical(self, key: Hashable, graph: Graph
+    def canonical(self, key: Hashable, graph: Graph,
+                  grid: Optional[Tuple[int, int]] = None
                   ) -> Tuple[Graph, TileSet, int]:
         """Pad ``graph`` and its tile batch onto the class's registered
         shapes; returns (padded graph, padded tiles, padded edge-row count).
+        ``grid`` overrides the deterministic :func:`serving_grid` choice —
+        the autotuned-config route; callers must then key the registration
+        by the tuned config too, so default and tuned shapes never alias.
         """
         grow = 1.0 + self.headroom
         entry = self._shapes.setdefault(
@@ -109,7 +113,8 @@ class ShapeRegistry:
         if E > entry["e_rows"]:
             entry["e_rows"] = _round_up(E * grow, 64)
         padded = pad_graph(graph, entry["v_pad"])
-        grid = serving_grid(entry["v_pad"], self.target_part)
+        if grid is None:
+            grid = serving_grid(entry["v_pad"], self.target_part)
         raw = grid_tile(padded, grid[0], grid[1], sparse=True,
                         pad_multiple=self.pad_multiple)
         T, s, e = entry["tile"]

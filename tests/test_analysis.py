@@ -13,6 +13,7 @@ satellite fixes (``rebuild_channels`` raising on orphaned recvs,
 ``test_sharded.py``).
 """
 import copy
+import random
 
 import pytest
 
@@ -91,13 +92,32 @@ def test_bucketed_and_per_chip_task_graphs_analyze_clean():
 
 
 def test_static_exchange_census_counts_one_collective_per_layer():
+    # the census invariant must hold for BOTH schedule variants — the
+    # sharded runner executes either one, Pallas kernels on or off
     for name in models.PAPER_MODELS:
         for n_layers in (1, 2, 3):
-            sp = _compiled(name, n_layers).schedule(False)
-            cen = A.exchange_census(sp)
-            assert cen.n_collectives == n_layers, (name, n_layers, cen.events)
-            assert cen.publish <= cen.tainted    # nothing untainted exchanged
-            assert not A.verify_exchange(sp)
+            for dispatch in (False, True):
+                sp = _compiled(name, n_layers).schedule(dispatch)
+                cen = A.exchange_census(sp)
+                assert cen.n_collectives == n_layers, \
+                    (name, n_layers, dispatch, cen.events)
+                assert cen.publish <= cen.tainted   # nothing untainted moves
+                assert not A.verify_exchange(sp)
+
+
+def test_sharded_runner_publish_set_matches_static_census():
+    """The census is only a proof if it derives the SAME publish set the
+    runner actually drains — check the dynamic set against the static one
+    for scan and kernel schedules alike."""
+    from repro.core.pipeline import ShardedRunner
+    g = graphs.random_graph(120, 480, seed=7, model="powerlaw")
+    ts = tiling.grid_tile(g, 4, 4, sparse=True)
+    for name in ("gcn", "gat", "ggnn"):        # spmm_w / segsoftmax / spmm
+        c = _compiled(name, 2)
+        for dispatch in (False, True):
+            r = ShardedRunner(c, g, ts, 1, kernel_dispatch=dispatch)
+            cen = A.exchange_census(c.schedule(dispatch))
+            assert r._publish == set(cen.publish), (name, dispatch)
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +381,33 @@ def test_census_mismatch_and_untainted_exchange_are_flagged():
     sp.outputs.append(h.id)
     diags = A.verify_exchange(sp)
     assert any(d.code == "ZH205" and d.node == h.id for d in diags)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_seeded_mutation_of_kernel_schedule_is_flagged(seed):
+    """The negative paths must cover the KERNEL-dispatch variant too —
+    seeded structural corruptions of the schedule the sharded Pallas path
+    executes may not slip past the census + schedule verifier."""
+    rng = random.Random(seed)
+    name = rng.choice(["gcn", "gat", "ggnn"])
+    sp = copy.deepcopy(_compiled(name, 2).schedule(True))
+    kind = rng.choice(["layer_count", "untainted_publish", "dropped_phase"])
+    if kind == "layer_count":
+        sp.n_layers += rng.randint(1, 2)
+        assert "ZH204" in _error_codes(A.verify_exchange(sp)), (name, kind)
+    elif kind == "untainted_publish":
+        _, h = _first(sp.prog, lambda n: n.op == "matmul")
+        sp.outputs.append(h.id)
+        diags = A.verify_exchange(sp)
+        assert any(d.code == "ZH205" and d.node == h.id for d in diags), \
+            (name, kind)
+    else:
+        # drop a gather-bearing phase: its collective disappears from the
+        # replayed event stream, so the per-layer census count breaks
+        victim = next(ph for ph in reversed(sp.phases) if ph.gathers)
+        sp.phases.remove(victim)
+        diags = A.verify_exchange(sp) + A.verify_schedule(sp)
+        assert _error_codes(diags), (name, kind)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,211 @@
+"""Schedule-aware tile autotuner (ISSUE 7): search harness, tune cache,
+and the serving engine's tuned route.
+
+Pinned here: (a) the hill-climb is deterministic and never worse than the
+default config on the simulated objective; (b) wall-clock confirmation
+measures the finalists on the real runner; (c) :class:`TuneCache` JSON
+round-trips with layout-signature provenance and keys scan/kernel tunings
+separately; (d) the server routes a tuned size class onto the tuned grid +
+bucketed tile batch, stays conformant with the oracle, and still converges
+to zero recompiles on a repeated stream; (e) the ``bucket_tiles`` bound
+construction realizes exactly ``min(n_buckets, n_tiles)`` buckets for every
+(T, n_buckets) the autotuner can sweep.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor, tiling
+from repro.gnn import graphs, models
+from repro.launch import autotune as AT
+from repro.serve import InferenceServer, quantize, size_class
+
+DIM = 16
+
+
+def _compiled(name, n_layers=1, dim=DIM):
+    tr = (models.trace_named(name, dim, dim) if n_layers == 1
+          else models.trace_stacked(name, n_layers, dim, dim, dim))
+    return tr, compiler.compile_gnn(tr)
+
+
+def _graph(v=200, e=800, seed=2):
+    return graphs.random_graph(v, e, seed=seed, model="powerlaw")
+
+
+# ---------------------------------------------------------------------------
+# search harness
+# ---------------------------------------------------------------------------
+
+def test_tileconfig_and_trial_roundtrip():
+    cfg = AT.TileConfig(16, 8, 2, 4)
+    assert AT.TileConfig.from_dict(cfg.to_dict()) == cfg
+    assert cfg.key() == (16, 8, 2, 4)
+    t = AT.padded_cost(_compiled("gcn")[1], _graph(), cfg)
+    assert t.cycles > 0 and t.config is cfg
+    assert t.to_dict()["config"] == cfg.to_dict()
+
+
+def test_neighbors_step_one_ladder_rung_and_respect_caps():
+    cfg = AT.TileConfig()                     # (8, 8, 4, 1)
+    g = _graph()
+    moves = AT.neighbors(cfg, g, max_shards=2)
+    keys = {m.key() for m in moves}
+    assert (4, 8, 4, 1) in keys and (16, 8, 4, 1) in keys
+    assert (8, 8, 4, 2) in keys               # shards capped at 2...
+    assert (8, 8, 4, 4) not in keys           # ...so no 4-shard move
+    # every move changes exactly one dimension by one rung
+    for m in moves:
+        assert sum(a != b for a, b in zip(m.key(), cfg.key())) == 1
+    # a tiny graph cannot tile onto more partitions than vertices
+    tiny = graphs.random_graph(12, 30, seed=0)
+    assert all(m.n_dst_parts <= 12 and m.n_src_parts <= 12
+               for m in AT.neighbors(cfg, tiny))
+
+
+def test_hillclimb_is_deterministic_and_beats_the_default():
+    _, c = _compiled("gcn", 2)
+    g = _graph()
+    a = AT.hillclimb(c, g, max_evals=24)
+    b = AT.hillclimb(c, g, max_evals=24)
+    assert [(t.config.key(), t.cycles) for t in a] == \
+           [(t.config.key(), t.cycles) for t in b]
+    default = AT.padded_cost(c, g, AT.TileConfig())
+    assert a[0].cycles <= default.cycles      # sorted ascending; never worse
+    assert len(a) <= 24
+
+
+def test_autotune_confirms_finalists_by_wallclock():
+    tr, c = _compiled("gcn")
+    g = _graph(120, 480, seed=4)
+    inputs = models.init_inputs(tr, g)
+    params = models.init_params(tr)
+    res = AT.autotune(c, g, inputs=inputs, params=params,
+                      max_evals=6, top=2, repeats=1)
+    assert res.n_evals == len(res.trials) <= 6
+    assert res.confirmed and all(t.wall_s is not None and t.wall_s > 0
+                                 for t in res.confirmed)
+    assert res.best in res.confirmed          # measured winner, not simulated
+    d = res.to_dict()
+    assert d["best"]["wall_s"] == res.best.wall_s
+
+
+# ---------------------------------------------------------------------------
+# tune cache
+# ---------------------------------------------------------------------------
+
+def test_tune_cache_roundtrips_and_keys_dispatch_variants_apart(tmp_path):
+    _, c = _compiled("gat", 2)
+    cache = AT.TuneCache()
+    cfg = AT.TileConfig(8, 4, 2, 4)
+    cache.put(AT.program_key(c, True), ("cls", 256), cfg,
+              layout_signature=("shardlayout", 4), cycles=123)
+    cache.put(AT.program_key(c, False), ("cls", 256), AT.TileConfig())
+    assert len(cache) == 2
+    assert cache.get(AT.program_key(c, True), ("cls", 256)) == cfg
+    # scan and kernel tunings never alias
+    assert cache.get(AT.program_key(c, False), ("cls", 256)) == AT.TileConfig()
+    assert cache.get(AT.program_key(c, True), ("other", 1)) is None
+    entry = cache.entry(AT.program_key(c, True), ("cls", 256))
+    assert entry["layout_signature"] == repr(("shardlayout", 4))
+    assert entry["cycles"] == 123
+
+    path = str(tmp_path / "tune.json")
+    cache.save(path)
+    loaded = AT.TuneCache.load(path)
+    assert len(loaded) == 2
+    assert loaded.get(AT.program_key(c, True), ("cls", 256)) == cfg
+    assert loaded.entry(AT.program_key(c, True),
+                        ("cls", 256)) == entry
+
+
+def test_tune_for_class_records_winner_with_layout_provenance():
+    _, c = _compiled("gcn", 2)
+    g = _graph()
+    cache = AT.TuneCache()
+    res = AT.tune_for_class(c, g, ("powerlaw", 256), cache=cache,
+                            max_evals=8)
+    entry = cache.entry(AT.program_key(c, True), ("powerlaw", 256))
+    assert entry is not None
+    assert AT.TileConfig.from_dict(entry["config"]) == res.best.config
+    assert entry["cycles"] == res.best.cycles
+    assert "shardlayout" in entry["layout_signature"]
+    assert "True" in entry["layout_signature"]     # kernel_dispatch recorded
+
+
+# ---------------------------------------------------------------------------
+# serving: the tuned route
+# ---------------------------------------------------------------------------
+
+def test_server_routes_tuned_class_and_stays_conformant():
+    tr, c = _compiled("gcn")
+    gs = [graphs.random_graph(48, 200, seed=k, model="powerlaw")
+          for k in range(3)]
+    ins = [models.init_inputs(tr, g, seed=k) for k, g in enumerate(gs)]
+    params = models.init_params(tr)
+
+    cache = AT.TuneCache()
+    class_key = (c.name, c.n_layers, size_class(gs[0]),
+                 quantize(len(gs), floor=1))
+    tuned_cfg = AT.TileConfig(n_dst_parts=4, n_src_parts=4,
+                              n_buckets=2, n_shards=1)
+    cache.put(AT.program_key(c, True), class_key, tuned_cfg)
+
+    srv = InferenceServer(c, params, tune_cache=cache)
+    outs = srv.submit(gs, ins)
+    for g, inp, out in zip(gs, ins, outs):
+        ref = executor.run_reference(tr, g, inp, params)
+        rel = float(np.max(np.abs(out[0] - np.asarray(ref[0])))
+                    / max(1.0, float(np.max(np.abs(np.asarray(ref[0]))))))
+        assert rel < 5e-4
+    # the registration landed under the tuned key, on the tuned grid
+    tuned_regs = [k for k in srv.shapes._shapes
+                  if ("tuned",) + tuned_cfg.key() in k]
+    assert tuned_regs, list(srv.shapes._shapes)
+    # repeated stream: warm cache, zero new compiles
+    compiles = srv.compile_count
+    srv.submit(gs, ins)
+    assert srv.compile_count == compiles
+    assert srv.cache_hits >= 1
+
+    # an un-tuned server of the same model uses the default route — its
+    # cache key must not alias the tuned one
+    srv2 = InferenceServer(c, params)
+    srv2.submit(gs, ins)
+    assert not any(("tuned",) + tuned_cfg.key() in k
+                   for k in srv2.shapes._shapes)
+
+
+# ---------------------------------------------------------------------------
+# bucket bounds under the autotuner sweep
+# ---------------------------------------------------------------------------
+
+def test_bucket_count_is_deterministic_under_autotuner_sweep():
+    """The realized bucket count is exactly min(n_buckets, n_tiles) for
+    every (T, n_buckets) pair the sweep can produce — the bound
+    construction is strictly increasing so no bucket ever collapses."""
+    g = _graph(150, 600, seed=9)
+    for n_dst in (2, 4, 8, 16):
+        ts = tiling.grid_tile(g, n_dst, n_dst, sparse=True)
+        for nb in (1, 2, 3, 4, 7, 8):
+            if nb == 1:
+                continue                       # build_tiles skips bucketing
+            bt = tiling.bucket_tiles(ts, nb)
+            assert bt.n_buckets == min(nb, ts.n_tiles), \
+                (n_dst, nb, ts.n_tiles)
+            assert sum(b.n_tiles for b in bt.buckets) == ts.n_tiles
+            assert all(b.n_tiles > 0 for b in bt.buckets)
+
+
+def test_quantize_buckets_snaps_shapes_and_preserves_content():
+    g = _graph(150, 600, seed=9)
+    bt = tiling.bucket_tiles(tiling.grid_tile(g, 4, 4, sparse=True), 3)
+    qt = tiling.quantize_buckets(bt, pad_multiple=8)
+    assert qt.n_buckets == bt.n_buckets
+    for qb, b in zip(qt.buckets, bt.buckets):
+        assert qb.n_tiles == b.n_tiles
+        for dim in (qb.s_max, qb.e_max):       # pow2, >= pad_multiple
+            assert dim >= 8 and (dim & (dim - 1)) == 0
+        assert qb.s_max >= b.s_max and qb.e_max >= b.e_max
+        # real tile payload is untouched by the padding
+        np.testing.assert_array_equal(qb.n_edge[: b.n_tiles],
+                                      b.n_edge[: b.n_tiles])

@@ -3,12 +3,13 @@
 Pinned here: (a) :func:`~repro.core.tiling.plan_shards` balances padded-edge
 cost and handles ragged partition counts; (b) the
 :class:`~repro.core.pipeline.ShardedRunner` matches the single-device
-``PipelinedRunner`` and the whole-graph oracle on all five paper models —
-in-process on ``min(4, visible devices)`` shards (the CI sharded-smoke step
-forces 8 host devices so this is a REAL multi-device run there), and in a
-subprocess on a forced 8-host-device mesh across {1, 2, 4, 8}-shard meshes;
-(c) the lowered program contains exactly ONE cross-device collective per
-layer boundary; (d) the multi-chip simulator cost model scales; (e) a
+``PipelinedRunner`` and the whole-graph oracle on all five paper models,
+with kernel dispatch ON (Pallas gather blocks inside ``shard_map``) and OFF
+(lax.scan fallback) — in-process on ``min(4, visible devices)`` shards (the
+CI sharded-smoke step forces 8 host devices so this is a REAL multi-device
+run there), and in a subprocess on a forced 8-host-device mesh across
+{1, 2, 4, 8}-shard meshes; (c) the lowered program contains exactly ONE
+cross-device collective per layer boundary, both schedule variants; (d) the multi-chip simulator cost model scales; (e) a
 hypothesis conformance sweep over random graphs × models × layers × ragged
 partition/bucket counts.
 """
@@ -106,10 +107,14 @@ def test_shard_layout_signature_distinguishes_meshes():
 
 @pytest.mark.parametrize("name", models.PAPER_MODELS)
 @pytest.mark.parametrize("n_layers", [1, 2])
-def test_sharded_matches_pipelined_and_oracle(name, n_layers):
+@pytest.mark.parametrize("dispatch", [False, True],
+                         ids=["scan", "kernel"])
+def test_sharded_matches_pipelined_and_oracle(name, n_layers, dispatch):
     """Runs on min(4, visible) shards: a real 4-way mesh under the CI
     sharded-smoke step (8 forced host devices), a 1-shard mesh in plain
-    tier-1 — the full shard_map/all-gather path executes either way."""
+    tier-1 — the full shard_map/all-gather path executes either way, with
+    the tile work going through the Pallas gather blocks when ``dispatch``
+    is on and the lax.scan fallback when it is off."""
     g = graphs.random_graph(150, 600, seed=3, model="powerlaw", n_edge_types=3)
     tr, c = _compiled(name, n_layers)
     params = models.init_params(tr)
@@ -119,9 +124,10 @@ def test_sharded_matches_pipelined_and_oracle(name, n_layers):
     out_p = pipeline.run_pipelined(c, g, bt, inputs, params,
                                    kernel_dispatch=False)
     out_s = pipeline.run_sharded(c, g, bt, inputs, params,
-                                 n_devices=_avail_mesh())
-    assert _rel_err(out_p[0], out_s[0]) < REL_TOL, (name, n_layers)
-    assert _rel_err(ref[0], out_s[0]) < REL_TOL, (name, n_layers)
+                                 n_devices=_avail_mesh(),
+                                 kernel_dispatch=dispatch)
+    assert _rel_err(out_p[0], out_s[0]) < REL_TOL, (name, n_layers, dispatch)
+    assert _rel_err(ref[0], out_s[0]) < REL_TOL, (name, n_layers, dispatch)
 
 
 def test_sharded_runner_bind_and_run_with():
@@ -330,19 +336,23 @@ _MESH_SCRIPT = textwrap.dedent("""
         bt = tiling.bucket_tiles(ts, 3)
         ref = pipeline.run_pipelined(c, g, bt, inputs, params,
                                      kernel_dispatch=False)
-        for n_dev in (1, 2, 4, 8):
-            r = pipeline.ShardedRunner(c, g, bt, n_dev)
-            got = r(inputs, params)
-            err = float(np.max(np.abs(np.asarray(got[0]) - np.asarray(ref[0])))
-                        / max(1.0, float(np.max(np.abs(np.asarray(ref[0]))))))
-            rec = {"model": name, "n_dev": n_dev, "rel": err}
-            if n_dev == 4 and name == "gcn":
-                # representative HLO cross-check; the per-model census is
-                # asserted statically (analysis.exchange_census) below
-                hlo = r.lower_text(inputs, params)
-                rec["collectives"] = len(re.findall(r"all-gather(?:-start)?\\(", hlo))
-                rec["n_layers"] = c.n_layers
-            out.append(rec)
+        for dispatch in (False, True):
+            for n_dev in ((1, 2, 4, 8) if not dispatch else (1, 4, 8)):
+                r = pipeline.ShardedRunner(c, g, bt, n_dev,
+                                           kernel_dispatch=dispatch)
+                got = r(inputs, params)
+                err = float(np.max(np.abs(np.asarray(got[0]) - np.asarray(ref[0])))
+                            / max(1.0, float(np.max(np.abs(np.asarray(ref[0]))))))
+                rec = {"model": name, "n_dev": n_dev, "dispatch": dispatch,
+                       "rel": err}
+                if n_dev == 4 and name in ("gcn", "gat"):
+                    # representative HLO cross-check for BOTH schedule
+                    # variants; the per-model census is asserted statically
+                    # (analysis.exchange_census) below
+                    hlo = r.lower_text(inputs, params)
+                    rec["collectives"] = len(re.findall(r"all-gather(?:-start)?\\(", hlo))
+                    rec["n_layers"] = c.n_layers
+                out.append(rec)
     print(json.dumps(out))
 """)
 
@@ -355,9 +365,10 @@ def test_static_collective_census_per_model():
 
     for name in models.PAPER_MODELS:
         _, c = _compiled(name, 2)
-        cen = A.exchange_census(c.schedule(False))
-        assert cen.n_collectives == c.n_layers, (name, cen.events)
-        assert not A.verify_exchange(c.schedule(False)), name
+        for dispatch in (False, True):
+            cen = A.exchange_census(c.schedule(dispatch))
+            assert cen.n_collectives == c.n_layers, (name, dispatch, cen.events)
+            assert not A.verify_exchange(c.schedule(dispatch)), (name, dispatch)
 
 
 @pytest.mark.slow
@@ -373,14 +384,14 @@ def test_forced_mesh_conformance_and_collective_census():
                          capture_output=True, text=True, timeout=1800)
     assert out.returncode == 0, out.stderr[-3000:]
     recs = json.loads(out.stdout.strip().splitlines()[-1])
-    assert len(recs) == 20
+    assert len(recs) == 35                    # 5 models x (4 scan + 3 kernel)
     for rec in recs:
         assert rec["rel"] < REL_TOL, rec
     checked = [rec for rec in recs if "collectives" in rec]
-    assert checked, "gcn HLO census record missing"
-    _, c = _compiled("gcn", 2)
-    static = A.exchange_census(c.schedule(False)).n_collectives
+    assert len(checked) == 4, "gcn/gat x scan/kernel HLO census missing"
     for rec in checked:
+        _, c = _compiled(rec["model"], 2)
+        static = A.exchange_census(c.schedule(rec["dispatch"])).n_collectives
         assert rec["collectives"] == static == rec["n_layers"], rec
 
 
