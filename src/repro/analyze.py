@@ -72,6 +72,54 @@ def analyze_matrix(names: List[str], layer_counts: List[int], dim: int,
     return report
 
 
+def render_codes_doc() -> str:
+    """``docs/DIAGNOSTICS.md``, generated from the ``analysis.CODES``
+    registry so the doc can never drift from the code (a test pins the file
+    to this function's output; regenerate with ``--write-codes-doc``)."""
+    families = (
+        ("ZA", "IR verifier (`verify_ir`)",
+         "Structural checks over the optimized `IRProgram`: op vocabulary, "
+         "def-use, dim re-inference, channel pairing, cycles, layer tags."),
+        ("ZS", "Schedule verifier (`verify_schedule`)",
+         "Legality of the lowered `ScheduledProgram`: gather ownership, "
+         "kernel-tag preconditions re-derived from the IR, cross-phase "
+         "dataflow, accumulator specs, missed-kernel lints."),
+        ("ZH", "Hazard analyzer & exchange census (`analyze_task_graph`, "
+         "`verify_exchange`)",
+         "Races and collective structure over stream-task graphs: drain "
+         "ordering, barrier coverage, the exactly-one-collective-per-layer "
+         "census, gather taint of exchanged values."),
+    )
+    lines = [
+        "# Diagnostics catalog",
+        "",
+        "Every code the static analysis layer (`src/repro/core/analysis/`) "
+        "can emit, with its default severity.  Codes are **append-only** — "
+        "tests and downstream tooling key on them, so they are never "
+        "renumbered.  See [ARCHITECTURE.md](../ARCHITECTURE.md) for where "
+        "each pass runs; `python -m repro.analyze --all` sweeps the full "
+        "paper-model matrix.",
+        "",
+        "This file is generated from `repro.analysis.CODES` by",
+        "`python -m repro.analyze --write-codes-doc docs/DIAGNOSTICS.md`;",
+        "`tests/test_docs.py` pins it byte-for-byte, so regenerate after "
+        "touching the registry.",
+    ]
+    for prefix, title, blurb in families:
+        lines += ["", f"## {prefix}xxx — {title}", "", blurb, "",
+                  "| code | severity | meaning |", "| --- | --- | --- |"]
+        for code in sorted(c for c in A.CODES if c.startswith(prefix)):
+            sev, meaning = A.CODES[code]
+            lines.append(f"| `{code}` | {sev} | {meaning} |")
+    lines += ["",
+              f"Total: {len(A.CODES)} registered codes "
+              f"({sum(1 for s, _ in A.CODES.values() if s == 'error')} error, "
+              f"{sum(1 for s, _ in A.CODES.values() if s == 'warn')} warn, "
+              f"{sum(1 for s, _ in A.CODES.values() if s == 'info')} info).",
+              ""]
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analyze",
@@ -91,7 +139,19 @@ def main(argv=None) -> int:
                          "severity exists (default: error)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write all findings to PATH as JSON")
+    ap.add_argument("--write-codes-doc", metavar="PATH", default=None,
+                    help="write the diagnostics catalog (docs/DIAGNOSTICS.md)"
+                         " generated from the CODES registry, then exit")
     args = ap.parse_args(argv)
+
+    if args.write_codes_doc:
+        parent = os.path.dirname(args.write_codes_doc)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.write_codes_doc, "w") as f:
+            f.write(render_codes_doc())
+        print(f"wrote {args.write_codes_doc} ({len(A.CODES)} codes)")
+        return 0
 
     names = [m.strip() for m in args.models.split(",") if m.strip()]
     for m in names:

@@ -58,14 +58,18 @@ class TileConfig:
     n_shards: int = 1
 
     def key(self) -> Tuple[int, int, int, int]:
+        """Hashable identity used to dedupe trials during the search."""
         return (self.n_dst_parts, self.n_src_parts,
                 self.n_buckets, self.n_shards)
 
     def to_dict(self) -> Dict[str, int]:
+        """JSON-able field dict (inverse of :meth:`from_dict`)."""
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: Dict[str, int]) -> "TileConfig":
+        """Rebuild a config from :meth:`to_dict` output (values coerced
+        to int, so JSON round-trips are exact)."""
         return cls(**{f.name: int(d[f.name])
                       for f in dataclasses.fields(cls)})
 
@@ -81,6 +85,7 @@ class Trial:
     wall_s: Optional[float] = None
 
     def to_dict(self) -> Dict:
+        """JSON-able record of the trial (config nested via its own dict)."""
         return dict(config=self.config.to_dict(), cycles=self.cycles,
                     balance=self.balance,
                     exchange_cycles=self.exchange_cycles,
@@ -89,12 +94,15 @@ class Trial:
 
 @dataclasses.dataclass
 class TuneResult:
+    """Outcome of one :func:`autotune` run: the winner plus the full
+    evaluated-trial record (for reports and for re-ranking offline)."""
     best: Trial
     trials: List[Trial]            # every config the search evaluated
     confirmed: List[Trial]         # finalists with wall_s measured
     n_evals: int
 
     def to_dict(self) -> Dict:
+        """JSON-able report payload (all trials serialized)."""
         return dict(best=self.best.to_dict(), n_evals=self.n_evals,
                     trials=[t.to_dict() for t in self.trials],
                     confirmed=[t.to_dict() for t in self.confirmed])
@@ -165,6 +173,7 @@ def hillclimb(compiled: C.CompiledGNN, graph: Graph,
     seen: Dict[Tuple, Trial] = {}
 
     def ev(cfg: TileConfig) -> Trial:
+        """Evaluate a config once; repeat lookups are free."""
         if cfg.key() not in seen:
             seen[cfg.key()] = padded_cost(compiled, graph, cfg, hw,
                                           kernel_dispatch)
@@ -272,6 +281,8 @@ class TuneCache:
 
     def put(self, prog_key: str, class_key, config: TileConfig, *,
             layout_signature=None, cycles: Optional[int] = None) -> None:
+        """Record (or overwrite) the winning config for a program + class,
+        with optional layout-signature/cycles provenance."""
         self._entries[self._k(prog_key, class_key)] = dict(
             config=config.to_dict(),
             layout_signature=(None if layout_signature is None
@@ -279,20 +290,26 @@ class TuneCache:
             cycles=cycles)
 
     def get(self, prog_key: str, class_key) -> Optional[TileConfig]:
+        """The tuned config for a program + class, or ``None`` if untuned
+        (the serving engine's per-size-class lookup)."""
         e = self._entries.get(self._k(prog_key, class_key))
         return None if e is None else TileConfig.from_dict(e["config"])
 
     def entry(self, prog_key: str, class_key) -> Optional[Dict]:
+        """The full stored record (config + provenance), or ``None``."""
         return self._entries.get(self._k(prog_key, class_key))
 
     # ------------------------------------------------------- persistence
     def to_json(self) -> str:
+        """Serialize every entry as a sorted JSON list (stable diffs)."""
         return json.dumps(
             [dict(prog_key=pk, class_key=ck, **e)
              for (pk, ck), e in sorted(self._entries.items())], indent=1)
 
     @classmethod
     def from_json(cls, text: str) -> "TuneCache":
+        """Rebuild a cache from :meth:`to_json` text (unknown keys kept
+        out; missing provenance fields default to ``None``)."""
         out = cls()
         for row in json.loads(text):
             out._entries[(row["prog_key"], row["class_key"])] = dict(
@@ -302,11 +319,13 @@ class TuneCache:
         return out
 
     def save(self, path: str) -> None:
+        """Write :meth:`to_json` to ``path``."""
         with open(path, "w") as f:
             f.write(self.to_json())
 
     @classmethod
     def load(cls, path: str) -> "TuneCache":
+        """Read a cache previously written by :meth:`save`."""
         with open(path) as f:
             return cls.from_json(f.read())
 

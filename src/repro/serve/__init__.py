@@ -5,13 +5,27 @@ Layers:
 
 * :mod:`repro.serve.signature` — size-class quantization and the structural
   request signature (tile shapes + kernel tags + feature dims).
-* :mod:`repro.serve.cache` — the LRU compiled-program cache with hit/miss/
-  compile/eviction counters.
-* :mod:`repro.serve.engine` — :class:`InferenceServer`, the front door:
-  ``submit(graphs, inputs) -> per-graph outputs``.
+* :mod:`repro.serve.cache` — the thread-safe LRU compiled-program cache with
+  hit/miss/compile/eviction counters and per-tenant eviction budgets.
+* :mod:`repro.serve.engine` — :class:`InferenceServer`, the synchronous
+  batch-at-a-time core: ``submit(graphs, inputs) -> per-graph outputs``.
+* :mod:`repro.serve.server` — :class:`AsyncInferenceServer`, the async tier:
+  per-request deadlines, continuous batching by size class, admission
+  control with structured :class:`Overloaded` shedding, background warmup,
+  multi-tenant cache budgeting.
+* :mod:`repro.serve.metrics` — :class:`ServeMetrics`, p50/p99 latency,
+  queue depth, batch fill, shed counts (exported as JSON).
+
+``docs/SERVING.md`` walks the whole request lifecycle.
 """
 from .cache import CacheStats, ProgramCache  # noqa: F401
 from .engine import InferenceServer  # noqa: F401
+from .metrics import Histogram, ServeMetrics  # noqa: F401
+from .server import (  # noqa: F401
+    AsyncInferenceServer,
+    Overloaded,
+    Ticket,
+)
 from .signature import (  # noqa: F401
     ShapeRegistry,
     canonical_tiles,

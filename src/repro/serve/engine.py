@@ -18,6 +18,7 @@ worst case); compilation cost is amortized across every request of a class.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -81,7 +82,41 @@ class InferenceServer:
                  donate_inputs: Optional[bool] = None,
                  shard_devices: Optional[int] = None,
                  shard_min_vertices: int = 2048,
-                 tune_cache=None):
+                 tune_cache=None,
+                 cache: Optional[ProgramCache] = None,
+                 shapes: Optional[ShapeRegistry] = None,
+                 cache_owner: Optional[str] = None):
+        """Build a server around one compiled model.
+
+        Args:
+            model: registered model name or a pre-compiled
+                :class:`~repro.core.compiler.CompiledGNN`.
+            params: default weights for every request (a request may
+                override them).
+            n_layers: stack depth when ``model`` is a name; must agree with
+                a pre-compiled model's layer count.
+            kernel_dispatch: run Pallas gather kernels (else the scan
+                schedule).
+            cache_capacity: LRU capacity when no shared ``cache`` is given.
+            target_part: vertices per destination partition for the
+                default serving grid.
+            donate_inputs: XLA buffer donation for padded request arrays
+                (``None`` auto-enables off-CPU).
+            shard_devices: route large classes over an N-device mesh.
+            shard_min_vertices: padded-vertex threshold for the sharded
+                route.
+            tune_cache: optional :class:`~repro.launch.autotune.TuneCache`
+                routing tuned classes onto tuned tile configs.
+            cache: a shared :class:`ProgramCache` (multi-tenant serving);
+                defaults to a private cache of ``cache_capacity``.
+            shapes: a shared :class:`ShapeRegistry`; defaults to private.
+            cache_owner: tenant tag for per-owner cache budgets; defaults
+                to the compiled model's name.
+
+        Raises:
+            ValueError: on a layer-count conflict or an unrealizable
+                ``shard_devices``.
+        """
         if isinstance(model, str):
             self.compiled = C.compile_gnn(
                 M.trace_named(model) if n_layers == 1
@@ -119,8 +154,13 @@ class InferenceServer:
         self._kernel_tags = tuple(sorted(
             {g.kernel for ph in sp.phases for g in ph.gathers}
             - {S.KERNEL_SCAN}))
-        self.cache = ProgramCache(capacity=cache_capacity)
-        self.shapes = ShapeRegistry(target_part=target_part)
+        self.cache = cache if cache is not None \
+            else ProgramCache(capacity=cache_capacity)
+        self.shapes = shapes if shapes is not None \
+            else ShapeRegistry(target_part=target_part)
+        self.cache_owner = (cache_owner if cache_owner is not None
+                            else self.compiled.name)
+        self._stats_lock = threading.Lock()
         self._requests = 0
         self._graphs_served = 0
         self._batches_run = 0
@@ -151,11 +191,14 @@ class InferenceServer:
                                    [inputs[i] for i in idxs], params)
             for i, out in zip(idxs, outs):
                 results[i] = out
-        self._requests += 1
-        self._graphs_served += len(graphs)
+        with self._stats_lock:
+            self._requests += 1
+            self._graphs_served += len(graphs)
         return results  # fully populated: every index belongs to one group
 
     def stats(self) -> Dict:
+        """Serving counters: requests/graphs/batches served, cache size and
+        hit/miss/compile counts, layer count, sharded-batch count."""
         return dict(requests=self._requests, graphs=self._graphs_served,
                     batches=self._batches_run, cache_size=len(self.cache),
                     n_layers=self.compiled.n_layers,
@@ -242,17 +285,21 @@ class InferenceServer:
                 key, lambda: ShardedRunner(self.compiled, merged_graph, tiles,
                                            n_dev, mode="contiguous",
                                            quantize_tile_cap=True,
-                                           kernel_dispatch=self.kernel_dispatch))
-            self._sharded_batches += 1
+                                           kernel_dispatch=self.kernel_dispatch),
+                owner=self.cache_owner)
+            with self._stats_lock:
+                self._sharded_batches += 1
         else:
             key = structure_signature(self.compiled, tiles, E_pad,
                                       self.kernel_dispatch) + (tuned_key,)
             runner = self.cache.get_or_build(
                 key, lambda: PipelinedRunner(self.compiled, merged_graph, tiles,
                                              kernel_dispatch=self.kernel_dispatch,
-                                             donate_inputs=self.donate_inputs))
+                                             donate_inputs=self.donate_inputs),
+                owner=self.cache_owner)
         outs = runner.run_with(tiles, merged_inputs, params)
-        self._batches_run += 1
+        with self._stats_lock:
+            self._batches_run += 1
 
         per_output = [batch.unbatch_vertex(np.asarray(o)[:V_real])
                       for o in outs]

@@ -22,6 +22,7 @@ across a stream of similar-but-not-identical graphs:
 from __future__ import annotations
 
 import math
+import threading
 from typing import Dict, Hashable, Optional, Tuple, Union
 
 from ..core import compiler as C
@@ -87,10 +88,22 @@ class ShapeRegistry:
 
     def __init__(self, headroom: float = 0.25, target_part: int = 256,
                  pad_multiple: int = 8):
+        """Create an empty registry.
+
+        Args:
+            headroom: growth factor applied over the first-seen dimensions
+                (0.25 = register 25% above what the first request realized).
+            target_part: vertices per destination partition fed to
+                :func:`serving_grid` when no explicit grid is given.
+            pad_multiple: row-count multiple tile shapes are padded to.
+        """
         self.headroom = headroom
         self.target_part = target_part
         self.pad_multiple = pad_multiple
         self._shapes: Dict[Hashable, Dict] = {}
+        # the async tier canonicalizes concurrently from worker threads; the
+        # grow-monotonically registration must not interleave
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
         return len(self._shapes)
@@ -103,31 +116,34 @@ class ShapeRegistry:
         ``grid`` overrides the deterministic :func:`serving_grid` choice —
         the autotuned-config route; callers must then key the registration
         by the tuned config too, so default and tuned shapes never alias.
+        Thread-safe: concurrent calls for one class serialize, so the
+        registered dimensions only ever grow.
         """
-        grow = 1.0 + self.headroom
-        entry = self._shapes.setdefault(
-            key, dict(v_pad=0, e_rows=0, tile=(0, 0, 0)))
-        V, E = graph.n_vertices, max(graph.n_edges, 1)
-        if V > entry["v_pad"]:
-            entry["v_pad"] = _round_up(V * grow, 64)
-        if E > entry["e_rows"]:
-            entry["e_rows"] = _round_up(E * grow, 64)
-        padded = pad_graph(graph, entry["v_pad"])
-        if grid is None:
-            grid = serving_grid(entry["v_pad"], self.target_part)
-        raw = grid_tile(padded, grid[0], grid[1], sparse=True,
-                        pad_multiple=self.pad_multiple)
-        T, s, e = entry["tile"]
-        if raw.n_tiles > T:
-            T = _round_up(raw.n_tiles * grow, 2)
-        T = max(T, 1)    # an edgeless graph tiles to zero tiles; keep one
-        # filler so the kernels always see a non-empty grid
-        if raw.s_max > s:
-            s = _round_up(raw.s_max * grow, self.pad_multiple)
-        if raw.e_max > e:
-            e = _round_up(raw.e_max * grow, self.pad_multiple)
-        entry["tile"] = (T, s, e)
-        return padded, pad_tileset(raw, T, s, e), entry["e_rows"]
+        with self._lock:
+            grow = 1.0 + self.headroom
+            entry = self._shapes.setdefault(
+                key, dict(v_pad=0, e_rows=0, tile=(0, 0, 0)))
+            V, E = graph.n_vertices, max(graph.n_edges, 1)
+            if V > entry["v_pad"]:
+                entry["v_pad"] = _round_up(V * grow, 64)
+            if E > entry["e_rows"]:
+                entry["e_rows"] = _round_up(E * grow, 64)
+            padded = pad_graph(graph, entry["v_pad"])
+            if grid is None:
+                grid = serving_grid(entry["v_pad"], self.target_part)
+            raw = grid_tile(padded, grid[0], grid[1], sparse=True,
+                            pad_multiple=self.pad_multiple)
+            T, s, e = entry["tile"]
+            if raw.n_tiles > T:
+                T = _round_up(raw.n_tiles * grow, 2)
+            T = max(T, 1)    # an edgeless graph tiles to zero tiles; keep one
+            # filler so the kernels always see a non-empty grid
+            if raw.s_max > s:
+                s = _round_up(raw.s_max * grow, self.pad_multiple)
+            if raw.e_max > e:
+                e = _round_up(raw.e_max * grow, self.pad_multiple)
+            entry["tile"] = (T, s, e)
+            return padded, pad_tileset(raw, T, s, e), entry["e_rows"]
 
 
 def structure_signature(model: Union[str, C.CompiledGNN],

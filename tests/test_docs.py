@@ -1,0 +1,82 @@
+"""Docs-integrity tests: generated diagnostics catalog + markdown links.
+
+Pins ``docs/DIAGNOSTICS.md`` byte-for-byte to ``repro.analyze.render_codes_doc``
+so the catalog can never drift from the ``CODES`` registry, and runs the
+intra-repo markdown link checker (``tools/check_links.py``) as a test so a
+broken link fails locally, not just in the CI docs job.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro import analyze
+from repro.core import analysis as A
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC = ROOT / "docs" / "DIAGNOSTICS.md"
+
+
+def test_diagnostics_doc_is_current():
+    """docs/DIAGNOSTICS.md must equal render_codes_doc() byte-for-byte."""
+    assert DOC.exists(), (
+        "docs/DIAGNOSTICS.md missing; regenerate with "
+        "`python -m repro.analyze --write-codes-doc docs/DIAGNOSTICS.md`")
+    assert DOC.read_text() == analyze.render_codes_doc(), (
+        "docs/DIAGNOSTICS.md is stale; regenerate with "
+        "`python -m repro.analyze --write-codes-doc docs/DIAGNOSTICS.md`")
+
+
+def test_diagnostics_doc_covers_every_code():
+    """Every registered code (and its severity) appears in the catalog."""
+    text = DOC.read_text()
+    for code, (sev, _meaning) in A.CODES.items():
+        assert f"`{code}`" in text, f"{code} missing from DIAGNOSTICS.md"
+        assert f"| `{code}` | {sev} |" in text, (
+            f"{code} listed with wrong severity (expected {sev})")
+    assert f"Total: {len(A.CODES)} registered codes" in text
+
+
+def test_codes_doc_families_partition_registry():
+    """The three rendered families (ZA/ZS/ZH) cover the whole registry."""
+    prefixes = ("ZA", "ZS", "ZH")
+    stray = [c for c in A.CODES if not c.startswith(prefixes)]
+    assert not stray, (
+        f"codes outside the documented families: {stray}; add a section "
+        "to render_codes_doc()")
+
+
+def test_write_codes_doc_cli(tmp_path):
+    """--write-codes-doc writes the same bytes the test pins."""
+    out = tmp_path / "DIAG.md"
+    rc = analyze.main(["--write-codes-doc", str(out)])
+    assert rc == 0
+    assert out.read_text() == analyze.render_codes_doc()
+
+
+def test_intra_repo_markdown_links():
+    """No markdown file may link to a missing intra-repo path."""
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_links
+    finally:
+        sys.path.pop(0)
+    broken, checked = check_links.check_links()
+    assert not broken, "broken markdown links:\n" + "\n".join(broken)
+    assert checked > 0, "link checker found no links at all (regex broken?)"
+
+
+def test_examples_compile():
+    """Every example must at least byte-compile (CI docs job parity)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "compileall", "-q", str(ROOT / "examples")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.parametrize("doc", ["README.md", "ARCHITECTURE.md"])
+def test_top_level_docs_link_serving_guide(doc):
+    """README and ARCHITECTURE must point readers at docs/SERVING.md."""
+    assert "docs/SERVING.md" in (ROOT / doc).read_text(), (
+        f"{doc} does not link docs/SERVING.md")

@@ -1,0 +1,78 @@
+"""Intra-repo markdown link checker (CI docs job; no network).
+
+Scans every tracked markdown file (repo root + ``docs/``) for
+``[text](target)`` links, resolves relative targets against the linking
+file, and fails if any target does not exist.  External (``http(s)://``,
+``mailto:``) and pure-anchor (``#...``) links are skipped; a ``#fragment``
+on a relative link is stripped before the existence check.
+
+Usage:
+    python tools/check_links.py            # check, exit 1 on broken links
+    python tools/check_links.py --list     # also print every checked link
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+#: [text](target) — target captured up to the closing paren (no nesting)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def markdown_files() -> List[pathlib.Path]:
+    """Every markdown file the repo's docs surface consists of."""
+    files = sorted(ROOT.glob("*.md"))
+    for sub in ("docs", "examples", "tools"):
+        d = ROOT / sub
+        if d.is_dir():
+            files += sorted(d.glob("**/*.md"))
+    return files
+
+
+def check_links() -> Tuple[List[str], int]:
+    """Returns (broken-link messages, total links checked)."""
+    broken: List[str] = []
+    checked = 0
+    for md in markdown_files():
+        text = md.read_text()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            checked += 1
+            path = target.split("#", 1)[0]
+            if not path:                       # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                line = text[:m.start()].count("\n") + 1
+                broken.append(f"{md.relative_to(ROOT)}:{line}: "
+                              f"broken link -> {target}")
+    return broken, checked
+
+
+def main(argv=None) -> int:
+    """CLI entry: prints broken links and returns a process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="print every file scanned")
+    args = ap.parse_args(argv)
+    if args.list:
+        for md in markdown_files():
+            print(md.relative_to(ROOT))
+    broken, checked = check_links()
+    for msg in broken:
+        print(msg, file=sys.stderr)
+    print(f"{checked} intra-repo links checked across "
+          f"{len(markdown_files())} markdown files; {len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
