@@ -256,7 +256,26 @@ class _TiledRun:
             part_id = jnp.asarray(t.part_id)
             n_edge = jnp.asarray(t.n_edge)
 
-            if g.kernel == S.KERNEL_SPMM:
+            if t.layout == "csr":
+                # CSR tiles skip the densify pass entirely: the kernels walk
+                # the per-tile row pointers over per-edge operands
+                row_ptr = jnp.asarray(t.row_ptr)
+                col = jnp.asarray(t.edge_src)
+                if g.kernel == S.KERNEL_SEGMENT_SOFTMAX:
+                    out = tops.gat_aggregate_csr(
+                        row_ptr, jnp.stack(edge_vals), xsrc, part_id,
+                        self._flags, n_parts=P)
+                else:
+                    if g.kernel == S.KERNEL_SPMM:
+                        w = jnp.ones(col.shape, jnp.float32)
+                    else:
+                        w = jnp.stack(edge_vals)
+                        emask = (jnp.arange(w.shape[1])[None, :]
+                                 < n_edge[:, None])
+                        w = jnp.where(emask, w, 0.0)
+                    out = tops.spmm_csr(row_ptr, col, w, xsrc, part_id,
+                                        self._flags, n_parts=P)
+            elif g.kernel == S.KERNEL_SPMM:
                 if self._dense is None:
                     self._dense = tops.densify_tiles(t)
                 adj, flags = self._dense

@@ -24,7 +24,8 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 # ---------------------------------------------------------------------------
 
 #: element-wise ops (VU in hardware) — unary (bias_add carries a param in attrs)
-ELW_UNARY = ("relu", "leaky_relu", "exp", "sigmoid", "tanh", "neg", "identity", "sqrt", "rsqrt", "bias_add")
+ELW_UNARY = ("relu", "leaky_relu", "exp", "sigmoid", "tanh", "neg",
+             "identity", "sqrt", "rsqrt", "bias_add")
 #: element-wise ops — binary (support broadcasting (N,1)x(N,F))
 ELW_BINARY = ("add", "sub", "mul", "div", "max2", "min2")
 #: GEMM-class ops (MU in hardware)
@@ -102,7 +103,8 @@ class IRNode:
 
     def short(self) -> str:
         extra = f" comm={self.comm_id}" if self.comm_id is not None else ""
-        return f"%{self.id} = {self.op}({', '.join('%%%d' % i for i in self.inputs)}) dim={self.dim}{extra}"
+        args = ', '.join('%%%d' % i for i in self.inputs)
+        return f"%{self.id} = {self.op}({args}) dim={self.dim}{extra}"
 
 
 @dataclasses.dataclass

@@ -74,14 +74,38 @@ def _compute_instr(node: IR.IRNode, rows: str) -> Instr:
     return Instr(_ELW_OPCODE[node.op], "VU", rows, n=node.dim, tag=node.op)
 
 
-def _kernel_instrs(g) -> List[Instr]:
+def _kernel_instrs(g, layout: str = "coo") -> List[Instr]:
     """Instruction template of one Pallas-dispatched gather block.
 
-    The dense tile kernels run the aggregation as an (n_dst × k) MXU matmul
-    per tile instead of per-edge VU gather indirection — that shape shift is
-    exactly what the simulator should cost.
+    ``layout="coo"``: the dense tile kernels run the aggregation as an
+    (n_dst × k) MXU matmul per tile instead of per-edge VU gather
+    indirection — that shape shift is exactly what the simulator should
+    cost.  ``layout="csr"``: the kernels walk per-tile row pointers, so the
+    work is E-proportional VU gather traffic (GTHR-prefixed opcodes pick up
+    the per-row indirection surcharge in ``instr_cycles``) rather than a
+    dense (n_dst × n_src) matmul over mostly-empty adjacency — on
+    heavy-tailed graphs the dense max-partition block is what keeps the
+    kernel configs behind the scan incumbent.
     """
     from . import schedule as S
+
+    if layout == "csr":
+        if g.kernel == S.KERNEL_SPMM:
+            # row-pointer walk + per-edge gather-accumulate of F-wide rows
+            return [Instr("GTHR.CSR", "VU", "n_edge", n=g.acc.dim,
+                          tag=g.kernel)]
+        if g.kernel == S.KERNEL_SPMM_WEIGHTED:
+            # no densify pass: weights ride the same per-edge walk (+1 lane
+            # for the weight multiply)
+            return [Instr("GTHR.CSR", "VU", "n_edge", n=g.acc.dim + 1,
+                          tag=g.kernel)]
+        if g.kernel == S.KERNEL_SEGMENT_SOFTMAX:
+            # per-edge mask/exp/rescale, then the row-pointer-walk reduce
+            return [Instr("SFTM.EDGE", "VU", "n_edge", n=3,
+                          tag="online-softmax"),
+                    Instr("SFTM.CSR", "VU", "n_edge", n=g.acc.dim,
+                          tag=g.kernel)]
+        raise ValueError(f"unknown kernel tag {g.kernel}")
 
     if g.kernel == S.KERNEL_SPMM:
         return [Instr("SPMM.TILE", "MU", "n_dst", krows="n_src", n=g.acc.dim,
@@ -120,6 +144,9 @@ class SDEFunctions:
     #: the stream scheduler uses this to pipeline across layer boundaries)
     level_layer: Dict[int, int] = dataclasses.field(default_factory=dict)
     n_layers: int = 1
+    #: tile edge layout the templates were emitted for ("coo" | "csr") —
+    #: the stream builder keys the edge-index traffic model on it
+    layout: str = "coo"
 
     def all_levels(self):
         return range(self.max_level + 1)
@@ -129,13 +156,18 @@ class SDEFunctions:
 
 
 def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
-             kernel_dispatch: bool = False) -> SDEFunctions:
+             kernel_dispatch: bool = False, layout: str = "coo") -> SDEFunctions:
     """Lower a scheduled program into SDE instruction templates.
 
     Accepts either a :class:`~repro.core.schedule.ScheduledProgram` (costed
     exactly as the JAX engines execute it, kernel blocks included) or an
     :class:`SDEPlan` (lowered internally with ``kernel_dispatch``).
+    ``layout`` selects the kernel-block cost templates — CSR tiles replace
+    the dense per-tile matmul with E-proportional row-pointer walks (see
+    :func:`_kernel_instrs`) and shrink the edge-index load traffic.
     """
+    if layout not in ("coo", "csr"):
+        raise ValueError(f"unknown tile layout {layout!r}")
     from . import schedule as S
 
     sp = (S.lower(plan, kernel_dispatch=kernel_dispatch)
@@ -165,7 +197,7 @@ def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
             else:
                 _push(e, lvl, _compute_instr(node, "n_edge"))
         for g in phase.kernel_gathers():
-            for ins in _kernel_instrs(g):
+            for ins in _kernel_instrs(g, layout):
                 _push(e, lvl, ins)
 
     # element-wise fusion: collapse adjacent VU ELW instrs into a single
@@ -192,4 +224,5 @@ def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
                         dst_load_dim=sp.dst_load_dim,
                         edge_feat_dim=sp.edge_feat_dim, out_dim=sp.out_dim,
                         max_level=sp.max_level,
-                        level_layer=sp.layer_of_level(), n_layers=sp.n_layers)
+                        level_layer=sp.layer_of_level(), n_layers=sp.n_layers,
+                        layout=layout)

@@ -56,12 +56,32 @@ def _padded_partition_ids(tiles) -> Tuple[np.ndarray, int]:
 
 
 def _tile_arrays(ts: TileSet) -> Dict[str, Array]:
-    return dict(
+    d = dict(
         src_ids=jnp.asarray(ts.src_ids), edge_src=jnp.asarray(ts.edge_src),
         edge_dst=jnp.asarray(ts.edge_dst), edge_gid=jnp.asarray(ts.edge_gid),
         n_src=jnp.asarray(ts.n_src), n_edge=jnp.asarray(ts.n_edge),
         part_id=jnp.asarray(ts.part_id), part_start=jnp.asarray(ts.part_start),
     )
+    if ts.row_ptr is not None:
+        d["row_ptr"] = jnp.asarray(ts.row_ptr)
+    return d
+
+
+def _perm_operand(reordering) -> Optional[Dict[str, Array]]:
+    """Traced (order, rank) operand pair; ``None`` for the identity (the
+    pytree structure is pinned by the runner's reorder-mode signature)."""
+    if reordering is None or reordering.is_identity:
+        return None
+    return dict(order=jnp.asarray(reordering.order),
+                rank=jnp.asarray(reordering.rank))
+
+
+def _check_reorder_mode(expected: str, reordering) -> None:
+    mode = "identity" if reordering is None else reordering.mode
+    if mode != expected:
+        raise ValueError(
+            f"reordering mode {mode!r} does not match this runner's "
+            f"compiled mode {expected!r}")
 
 
 # ---- scan-gather accumulator semantics (shared by Pipelined/Sharded) -------
@@ -139,7 +159,8 @@ class PipelinedRunner:
     def __init__(self, compiled: C.CompiledGNN, graph: Graph, tiles,
                  tile_kernel: Optional[Callable] = None,
                  kernel_dispatch: Optional[bool] = None,
-                 donate_inputs: bool = False):
+                 donate_inputs: bool = False,
+                 reordering=None):
         from ..kernels.tile_spmm import ops as tops
 
         if kernel_dispatch is None:
@@ -148,12 +169,21 @@ class PipelinedRunner:
         self.sp: S.ScheduledProgram = compiled.schedule(kernel_dispatch)
         self.graph = graph
         self.tiles = tiles
+        self.layout = getattr(tiles, "layout", "coo")
         self.tile_kernel = tile_kernel if tile_kernel is not None else tops.spmm
+        self.csr_kernel = tops.spmm_csr
         self.softmax_kernel = tops.gat_aggregate
+        self.softmax_csr_kernel = tops.gat_aggregate_csr
+        # ``graph`` (and the tiles) live in reordered vertex space when a
+        # non-identity ``reordering`` is given; the runner permutes request
+        # inputs in and outputs back, so callers stay in original ids
+        self.reordering = reordering
+        self.reorder_mode = ("identity" if reordering is None
+                             else reordering.mode)
         self.part_ids_pad, self.dmax = _padded_partition_ids(tiles)
         self._kernels = {g.kernel for ph in self.sp.phases for g in ph.gathers}
         self._signature = (self.sp.structure_signature(),
-                           tiles.shape_signature())
+                           tiles.shape_signature(), self.reorder_mode)
         self._operands: Optional[Tuple] = None   # lazy bind of ctor tiles
         self.donate_inputs = donate_inputs
         self._jitted = jax.jit(self._run,
@@ -182,23 +212,27 @@ class PipelinedRunner:
                                       .astype(np.float32)))
 
     def _bucket_const(self, b: TileSet, with_adj: bool) -> Dict[str, Array]:
-        """Per-bucket kernel metadata; dense adjacency only for pure SpMM."""
+        """Per-bucket kernel metadata; dense adjacency only for pure SpMM
+        over COO tiles (CSR kernels walk row pointers instead)."""
         from ..kernels.tile_spmm.ops import densify_tiles
         kc = self._tile_const(b)
-        if with_adj:
+        if with_adj and b.layout != "csr":
             adj, _ = densify_tiles(b)
             kc["adj"] = jnp.asarray(adj)
         return kc
 
     # ------------------------------------------------------------------ bind
-    def bind(self, tiles) -> Tuple:
-        """Device operands (tile arrays + kernel constants) for a tile set
-        structurally identical to the construction one — the per-request
-        rebind step the serving cache runs instead of re-jitting."""
+    def bind(self, tiles, reordering=None) -> Tuple:
+        """Device operands (tile arrays + kernel constants + permutation) for
+        a tile set structurally identical to the construction one — the
+        per-request rebind step the serving cache runs instead of
+        re-jitting.  ``reordering`` must realize the same mode the runner
+        was compiled with (its (order, rank) arrays are traced operands)."""
         if tiles.shape_signature() != self.tiles.shape_signature():
             raise ValueError(
                 "tile set is not structurally identical to this runner's: "
                 f"{tiles.shape_signature()} != {self.tiles.shape_signature()}")
+        _check_reorder_mode(self.reorder_mode, reordering)
         buckets: List[TileSet] = (
             list(tiles.buckets) if isinstance(tiles, BucketedTileSet) else [tiles])
         tas = tuple(_tile_arrays(b) for b in buckets)
@@ -214,28 +248,28 @@ class PipelinedRunner:
             st = tiles.source if isinstance(tiles, BucketedTileSet) else tiles
             ta0 = _tile_arrays(st)
             kc0 = self._tile_const(st)
-        return (tas, kcs, ta0, kc0)
+        return (tas, kcs, ta0, kc0, _perm_operand(reordering))
 
     # ------------------------------------------------------------------ run
     def __call__(self, inputs: Dict[str, Array], params: Dict[str, Array],
                  operands: Optional[Tuple] = None) -> List[Array]:
         if operands is None:
             if self._operands is None:
-                self._operands = self.bind(self.tiles)
+                self._operands = self.bind(self.tiles, self.reordering)
             operands = self._operands
-        tas, kcs, ta0, kc0 = operands
+        tas, kcs, ta0, kc0, perm = operands
         return self._jitted({k: jnp.asarray(v) for k, v in inputs.items()},
                             {k: jnp.asarray(v) for k, v in params.items()},
-                            tas, kcs, ta0, kc0)
+                            tas, kcs, ta0, kc0, perm)
 
     def run_with(self, tiles, inputs: Dict[str, Array],
-                 params: Dict[str, Array]) -> List[Array]:
+                 params: Dict[str, Array], reordering=None) -> List[Array]:
         """Execute a different same-signature tile set through the warm
         compilation (no retrace: operand shapes are identical by contract)."""
-        return self(inputs, params, operands=self.bind(tiles))
+        return self(inputs, params, operands=self.bind(tiles, reordering))
 
     # ---------------------------------------------------------- trace-time
-    def _run(self, inputs, params, tas, kcs, ta0, kc0) -> List[Array]:
+    def _run(self, inputs, params, tas, kcs, ta0, kc0, perm) -> List[Array]:
         from ..kernels.tile_spmm.ops import (densify_edge_scores,
                                              densify_edge_weights)
 
@@ -245,6 +279,14 @@ class PipelinedRunner:
         pad_ids = jnp.asarray(self.part_ids_pad)          # (P, Dmax), V = invalid
         pad_valid = (pad_ids < V)[..., None]              # (P, Dmax, 1)
         safe_pad_ids = jnp.minimum(pad_ids, V - 1)
+
+        if perm is not None:
+            # requests arrive in original vertex order; the tiles (and edge
+            # arrays, which degree_sort leaves in place) live in reordered
+            # space — permute vertex features in, outputs back at the end
+            inputs = dict(inputs)
+            for name in {name for _, name in sp.vertex_inputs}:
+                inputs[name] = inputs[name][perm["order"]]
 
         vstore: Dict[int, Array] = {nid: inputs[name]
                                     for nid, name in sp.vertex_inputs}
@@ -368,10 +410,17 @@ class PipelinedRunner:
                         return elookup(g.score_id)[:, 0], h[xs["edge_src"]]
 
                     scores_e, vals = jax.vmap(tile_se)(xs0)    # (T,E), (T,E,F)
-                    scores = densify_edge_scores(
-                        scores_e, ta0["edge_dst"], ta0["n_edge"], dmax=dmax)
-                    out = self.softmax_kernel(scores, vals, ta0["part_id"],
-                                              kc0["flags"], n_parts=P)
+                    if self.layout == "csr":
+                        # per-edge scores/vals feed the kernel directly: the
+                        # row-pointer walk replaces the densify pass
+                        out = self.softmax_csr_kernel(
+                            ta0["row_ptr"], scores_e, vals, ta0["part_id"],
+                            kc0["flags"], n_parts=P)
+                    else:
+                        scores = densify_edge_scores(
+                            scores_e, ta0["edge_dst"], ta0["n_edge"], dmax=dmax)
+                        out = self.softmax_kernel(scores, vals, ta0["part_id"],
+                                                  kc0["flags"], n_parts=P)
                     out = jnp.where(kc0["pmask"][:, None, None] > 0, out, 0.0)
                     publish_gather(g.acc.recv_id, out)
                     continue
@@ -382,22 +431,45 @@ class PipelinedRunner:
                 for ta, kc in zip(tas, kcs):
                     senv = eval_vertex(ta["src_ids"], phase.src.nodes)
                     xsrc = src_value(senv, g.src_value_id, ta["src_ids"])
-                    if g.kernel == S.KERNEL_SPMM:
-                        adj = kc["adj"]
-                    else:        # weighted: densify the runtime edge weights
-                        xs_b = with_dst(ta)
+                    if self.layout == "csr":
+                        if g.kernel == S.KERNEL_SPMM:
+                            w = jnp.ones(ta["edge_src"].shape, jnp.float32)
+                        else:
+                            xs_b = with_dst(ta)
 
-                        def tile_w(xs):
-                            senv_t = eval_vertex(xs["src_ids"], phase.src.nodes)
-                            _, elookup = edge_env(g.edge_nodes, xs, senv_t)
-                            return elookup(g.weight_id)[:, 0]
+                            def tile_w(xs):
+                                senv_t = eval_vertex(xs["src_ids"],
+                                                     phase.src.nodes)
+                                _, elookup = edge_env(g.edge_nodes, xs, senv_t)
+                                return elookup(g.weight_id)[:, 0]
 
-                        w = jax.vmap(tile_w)(xs_b)             # (T, E)
-                        adj = densify_edge_weights(
-                            w, ta["edge_dst"], ta["edge_src"], ta["n_edge"],
-                            dmax=dmax, smax=int(ta["src_ids"].shape[1]))
-                    out = self.tile_kernel(adj, xsrc, ta["part_id"],
-                                           kc["flags"], n_parts=P)
+                            w = jax.vmap(tile_w)(xs_b)         # (T, E)
+                            # zero padded slots: they are unreachable via the
+                            # row pointers but must not inject inf/NaN
+                            emask = (jnp.arange(w.shape[1])[None, :]
+                                     < ta["n_edge"][:, None])
+                            w = jnp.where(emask, w, 0.0)
+                        out = self.csr_kernel(ta["row_ptr"], ta["edge_src"],
+                                              w, xsrc, ta["part_id"],
+                                              kc["flags"], n_parts=P)
+                    else:
+                        if g.kernel == S.KERNEL_SPMM:
+                            adj = kc["adj"]
+                        else:    # weighted: densify the runtime edge weights
+                            xs_b = with_dst(ta)
+
+                            def tile_w(xs):
+                                senv_t = eval_vertex(xs["src_ids"],
+                                                     phase.src.nodes)
+                                _, elookup = edge_env(g.edge_nodes, xs, senv_t)
+                                return elookup(g.weight_id)[:, 0]
+
+                            w = jax.vmap(tile_w)(xs_b)         # (T, E)
+                            adj = densify_edge_weights(
+                                w, ta["edge_dst"], ta["edge_src"], ta["n_edge"],
+                                dmax=dmax, smax=int(ta["src_ids"].shape[1]))
+                        out = self.tile_kernel(adj, xsrc, ta["part_id"],
+                                               kc["flags"], n_parts=P)
                     # partitions with no tile in this bucket are never
                     # written by the kernel (uninitialized, may be NaN)
                     total = total + jnp.where(kc["pmask"][:, None, None] > 0,
@@ -426,15 +498,20 @@ class PipelinedRunner:
                 for g in scan_gathers:
                     publish_gather(g.acc.recv_id, _drain_gather_acc(acc, g))
 
-        return [vstore[o] for o in sp.outputs]
+        outs = [vstore[o] for o in sp.outputs]
+        if perm is not None:
+            outs = [o[perm["rank"]] for o in outs]
+        return outs
 
 
 def run_pipelined(compiled: C.CompiledGNN, graph: Graph, tiles,
                   inputs: Dict[str, Array], params: Dict[str, Array],
                   tile_kernel: Optional[Callable] = None,
-                  kernel_dispatch: Optional[bool] = None) -> List[Array]:
+                  kernel_dispatch: Optional[bool] = None,
+                  reordering=None) -> List[Array]:
     return PipelinedRunner(compiled, graph, tiles, tile_kernel=tile_kernel,
-                           kernel_dispatch=kernel_dispatch)(inputs, params)
+                           kernel_dispatch=kernel_dispatch,
+                           reordering=reordering)(inputs, params)
 
 
 # ---------------------------------------------------------------------------
@@ -564,6 +641,10 @@ def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool,
             n_edge=stack(b.n_edge), part_id=stack(b.part_id),
             local_pid=stack(plan.local_slot_of_part[b.part_id].astype(np.int32)),
         )
+        if b.row_ptr is not None:
+            # filler rows keep the all-zero pointer table: every CSR row run
+            # is [0, 0), the correct empty-tile contribution
+            ops["row_ptr"] = stack(b.row_ptr)
         # filler rows extend the last real partition run (see docstring)
         for k, sel in enumerate(sel_of):
             if 0 < len(sel) < cap:
@@ -589,7 +670,8 @@ def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool,
             cap = _quantize_cap(cap)
         caps.append(cap)
         adj_np = densify_tiles(b)[0] if (want_kernels and
-                                         S.KERNEL_SPMM in kernels) else None
+                                         S.KERNEL_SPMM in kernels and
+                                         b.layout != "csr") else None
         bucket_ops.append(shard_stack(b, cap, adj_np))
 
     pad_ids = _shard_partition_ids(plan, tiles.part_start, tiles.part_size,
@@ -646,7 +728,8 @@ class ShardedRunner:
                  quantize_tile_cap: bool = False,
                  devices: Optional[List] = None,
                  tile_kernel: Optional[Callable] = None,
-                 kernel_dispatch: Optional[bool] = None):
+                 kernel_dispatch: Optional[bool] = None,
+                 reordering=None):
         from ..kernels.tile_spmm import ops as tops
 
         devices = list(devices) if devices is not None else list(jax.devices())
@@ -664,22 +747,34 @@ class ShardedRunner:
         self.sp: S.ScheduledProgram = compiled.schedule(self.kernel_dispatch)
         self.graph = graph
         self.tiles = tiles
+        self.layout = getattr(tiles, "layout", "coo")
         self.mode = mode
         self.quantize_tile_cap = quantize_tile_cap
         self.n_devices = n_devices
         self.tile_kernel = tile_kernel if tile_kernel is not None else tops.spmm
+        self.csr_kernel = tops.spmm_csr
         self.softmax_kernel = tops.gat_aggregate
+        self.softmax_csr_kernel = tops.gat_aggregate_csr
+        # like PipelinedRunner: graph/tiles in reordered space, requests in
+        # original ids; the (order, rank) permutation rides as a replicated
+        # traced operand, so it adds no collective to the exchange census
+        self.reordering = reordering
+        self.reorder_mode = ("identity" if reordering is None
+                             else reordering.mode)
         self._kernels = frozenset(g.kernel for ph in self.sp.phases
                                   for g in ph.gathers)
         self.plan = plan_shards(tiles, n_devices, mode=mode)
         self.dmax = int(tiles.part_size.max())
         self._ops_np, self._repl_np, self.caps = _shard_layout(
             tiles, self.plan, quantize_tile_cap, self._kernels)
+        if reordering is not None and not reordering.is_identity:
+            self._repl_np = dict(self._repl_np,
+                                 order=reordering.order, rank=reordering.rank)
         self._publish = self._publish_ids()
         self._signature = ("sharded", n_devices, mode, self.plan.n_local_parts,
                            self.caps, self.kernel_dispatch,
                            self.sp.structure_signature(),
-                           tiles.shape_signature())
+                           tiles.shape_signature(), self.reorder_mode)
         self.mesh = jax.sharding.Mesh(np.asarray(devices[:n_devices]),
                                       ("shards",))
         P = jax.sharding.PartitionSpec
@@ -743,14 +838,16 @@ class ShardedRunner:
         return pub - {nid for nid, _ in sp.vertex_inputs}
 
     # ------------------------------------------------------------------ bind
-    def bind(self, tiles) -> Tuple:
+    def bind(self, tiles, reordering=None) -> Tuple:
         """Device operands for a tile set structurally identical to the
         construction one (same tile-set signature AND same realized shard
-        layout shapes) — the per-request rebind step of the serving cache."""
+        layout shapes) — the per-request rebind step of the serving cache.
+        ``reordering`` must realize the runner's compiled reorder mode."""
         if tiles.shape_signature() != self.tiles.shape_signature():
             raise ValueError(
                 "tile set is not structurally identical to this runner's: "
                 f"{tiles.shape_signature()} != {self.tiles.shape_signature()}")
+        _check_reorder_mode(self.reorder_mode, reordering)
         plan = plan_shards(tiles, self.n_devices, mode=self.mode)
         if plan.n_local_parts != self.plan.n_local_parts:
             raise ValueError(
@@ -761,6 +858,8 @@ class ShardedRunner:
         if caps != self.caps:
             raise ValueError(
                 f"shard tile capacities changed: {caps} != {self.caps}")
+        if reordering is not None and not reordering.is_identity:
+            repl = dict(repl, order=reordering.order, rank=reordering.rank)
         return (jax.tree_util.tree_map(jnp.asarray, ops),
                 jax.tree_util.tree_map(jnp.asarray, repl))
 
@@ -780,10 +879,10 @@ class ShardedRunner:
                             ops, repl)
 
     def run_with(self, tiles, inputs: Dict[str, Array],
-                 params: Dict[str, Array]) -> List[Array]:
+                 params: Dict[str, Array], reordering=None) -> List[Array]:
         """Execute a different same-signature tile set through the warm
         compilation (no retrace: operand shapes identical by contract)."""
-        return self(inputs, params, operands=self.bind(tiles))
+        return self(inputs, params, operands=self.bind(tiles, reordering))
 
     def lower_text(self, inputs: Dict[str, Array],
                    params: Dict[str, Array]) -> str:
@@ -813,6 +912,13 @@ class ShardedRunner:
         safe_pad_ids = jnp.minimum(pad_ids, V - 1)
         full_ids = repl["full_pad_ids"]                   # (K*P_loc*Dmax,)
         part_start = jnp.asarray(self.tiles.part_start)   # (P,) by contract
+
+        if "order" in repl:
+            # replicated permutation of replicated inputs: no collective,
+            # the per-layer all-gather census is unchanged
+            inputs = dict(inputs)
+            for name in {name for _, name in sp.vertex_inputs}:
+                inputs[name] = inputs[name][repl["order"]]
 
         vstore: Dict[int, Array] = {nid: inputs[name]
                                     for nid, name in sp.vertex_inputs}
@@ -943,10 +1049,17 @@ class ShardedRunner:
                         return elookup(g.score_id)[:, 0], h[xs["edge_src"]]
 
                     scores_e, vals = jax.vmap(tile_se)(xs0)
-                    scores = densify_edge_scores(
-                        scores_e, xs0["edge_dst"], xs0["n_edge"], dmax=dmax)
-                    out = self.softmax_kernel(scores, vals, xs0["local_pid"],
-                                              sm["flags"][0], n_parts=P_loc)
+                    if self.layout == "csr":
+                        out = self.softmax_csr_kernel(
+                            sm["row_ptr"][0], scores_e, vals,
+                            xs0["local_pid"], sm["flags"][0], n_parts=P_loc)
+                    else:
+                        scores = densify_edge_scores(
+                            scores_e, xs0["edge_dst"], xs0["n_edge"], dmax=dmax)
+                        out = self.softmax_kernel(scores, vals,
+                                                  xs0["local_pid"],
+                                                  sm["flags"][0],
+                                                  n_parts=P_loc)
                     out = jnp.where(sm["pmask"][0][:, None, None] > 0,
                                     out, 0.0)
                     drain(g, out)
@@ -959,20 +1072,34 @@ class ShardedRunner:
                     xs = local(ta, self._SCAN_KEYS)
                     senv = eval_vertex(xs["src_ids"], phase.src.nodes)
                     xsrc = src_value(senv, g.src_value_id, xs["src_ids"])
-                    if g.kernel == S.KERNEL_SPMM:
-                        adj = ta["adj"][0]
-                    else:    # weighted: densify the runtime edge weights
-                        def tile_w(x):
-                            senv_t = eval_vertex(x["src_ids"], phase.src.nodes)
-                            _, elookup = edge_env(g.edge_nodes, x, senv_t)
-                            return elookup(g.weight_id)[:, 0]
 
-                        w = jax.vmap(tile_w)(xs)
-                        adj = densify_edge_weights(
-                            w, xs["edge_dst"], xs["edge_src"], xs["n_edge"],
-                            dmax=dmax, smax=int(xs["src_ids"].shape[1]))
-                    out = self.tile_kernel(adj, xsrc, xs["local_pid"],
-                                           ta["flags"][0], n_parts=P_loc)
+                    def tile_w(x):
+                        senv_t = eval_vertex(x["src_ids"], phase.src.nodes)
+                        _, elookup = edge_env(g.edge_nodes, x, senv_t)
+                        return elookup(g.weight_id)[:, 0]
+
+                    if self.layout == "csr":
+                        if g.kernel == S.KERNEL_SPMM:
+                            w = jnp.ones(xs["edge_src"].shape, jnp.float32)
+                        else:
+                            w = jax.vmap(tile_w)(xs)
+                            emask = (jnp.arange(w.shape[1])[None, :]
+                                     < xs["n_edge"][:, None])
+                            w = jnp.where(emask, w, 0.0)
+                        out = self.csr_kernel(ta["row_ptr"][0],
+                                              xs["edge_src"], w, xsrc,
+                                              xs["local_pid"], ta["flags"][0],
+                                              n_parts=P_loc)
+                    else:
+                        if g.kernel == S.KERNEL_SPMM:
+                            adj = ta["adj"][0]
+                        else:    # weighted: densify the runtime edge weights
+                            w = jax.vmap(tile_w)(xs)
+                            adj = densify_edge_weights(
+                                w, xs["edge_dst"], xs["edge_src"], xs["n_edge"],
+                                dmax=dmax, smax=int(xs["src_ids"].shape[1]))
+                        out = self.tile_kernel(adj, xsrc, xs["local_pid"],
+                                               ta["flags"][0], n_parts=P_loc)
                     # local slots with no tile in this bucket are never
                     # written by the kernel (uninitialized, may be NaN)
                     total = total + jnp.where(
@@ -1003,14 +1130,19 @@ class ShardedRunner:
             # leaves in ONE collective (the static census counts on it)
             publish(pending)
 
-        return [vstore[o] for o in sp.outputs]
+        outs = [vstore[o] for o in sp.outputs]
+        if "rank" in repl:
+            outs = [o[repl["rank"]] for o in outs]
+        return outs
 
 
 def run_sharded(compiled: C.CompiledGNN, graph: Graph, tiles,
                 inputs: Dict[str, Array], params: Dict[str, Array],
                 n_devices: Optional[int] = None, mode: str = "cost",
                 tile_kernel: Optional[Callable] = None,
-                kernel_dispatch: Optional[bool] = None) -> List[Array]:
+                kernel_dispatch: Optional[bool] = None,
+                reordering=None) -> List[Array]:
     return ShardedRunner(compiled, graph, tiles, n_devices, mode=mode,
                          tile_kernel=tile_kernel,
-                         kernel_dispatch=kernel_dispatch)(inputs, params)
+                         kernel_dispatch=kernel_dispatch,
+                         reordering=reordering)(inputs, params)

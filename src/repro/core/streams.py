@@ -226,8 +226,14 @@ def build_task_graph(sde: SDEFunctions, tiles: TileSet, hw: HWConfig,
                           label=f"s[{lvl}].{p}.{t}",
                           level=lvl, part=p, tile=int(t), role="s")
                 tasks.append(st); tid += 1
+                if getattr(sde, "layout", "coo") == "csr":
+                    # CSR tile: one column index per edge plus the (n_dst+1)
+                    # row-pointer vector, instead of the COO (src, dst) pair
+                    eidx_bytes = ne * 4 + (n_dst + 1) * 4
+                else:
+                    eidx_bytes = ne * 8  # COO pair
                 et = Task(tid, "e", _bind(e_t, ns, ne, n_dst), deps=[st.tid],
-                          bytes_in=ne * (8 + sde.edge_feat_dim * by),  # COO pair + edge feats
+                          bytes_in=eidx_bytes + ne * sde.edge_feat_dim * by,
                           label=f"e[{lvl}].{p}.{t}",
                           level=lvl, part=p, tile=int(t), role="e")
                 tasks.append(et); tid += 1

@@ -55,6 +55,12 @@ class TileSet:
     sparse: bool
     n_vertices: int
     n_edges: int
+    # intra-tile edge layout: "coo" keeps edges in arrival order; "csr" sorts
+    # the real edge slots of each tile by local dst row and adds per-tile row
+    # pointers (see :func:`csr_tiles`), so kernels walk contiguous rows
+    # instead of scanning padded edge slots.
+    layout: str = "coo"
+    row_ptr: Optional[np.ndarray] = None  # (T, D_max+1) int32, csr only
 
     @property
     def n_tiles(self) -> int:
@@ -77,11 +83,20 @@ class TileSet:
         """Destination rows are loaded once per partition per phase."""
         return int(self.part_size.sum())
 
+    def edge_index_bytes(self) -> int:
+        """Edge-index traffic: COO ships (src, dst) int32 pairs per edge;
+        CSR ships one column index per edge plus each tile's (D_max+1)-entry
+        row-pointer table."""
+        E = int(self.n_edge.sum())
+        if self.layout == "csr":
+            width = self.row_ptr.shape[1] if self.row_ptr is not None else 1
+            return E * 4 + self.n_tiles * width * 4
+        return E * 2 * 4
+
     def offchip_read_bytes(self, dim: int, dtype_bytes: int = 4,
                            dst_streams: int = 1) -> int:
         vert = (self.src_vertex_loads() + dst_streams * self.dst_vertex_loads()) * dim * dtype_bytes
-        edge_list = int(self.n_edge.sum()) * 2 * 4  # (src,dst) int32 pairs
-        return vert + edge_list
+        return vert + self.edge_index_bytes()
 
     def tiles_of_partition(self, p: int) -> np.ndarray:
         return np.nonzero(self.part_id == p)[0]
@@ -105,8 +120,10 @@ class TileSet:
     def shape_signature(self) -> Tuple:
         """Everything a jitted runner's compilation depends on — padded tile
         shapes and the partition table — and nothing edge-list-specific.
-        Two tile sets with equal signatures can share one compiled program."""
-        return ("tiles", self.n_tiles, self.s_max, self.e_max,
+        Two tile sets with equal signatures can share one compiled program.
+        ``layout`` is part of the signature: CSR and COO tile sets lower to
+        different kernels and must never alias one cached program."""
+        return ("tiles", self.layout, self.n_tiles, self.s_max, self.e_max,
                 self.n_dst_parts, self.n_src_parts, self.n_vertices,
                 tuple(self.part_start.tolist()),
                 tuple(self.part_size.tolist()))
@@ -118,8 +135,14 @@ def _even_bounds(n: int, parts: int) -> np.ndarray:
 
 
 def grid_tile(graph: Graph, n_dst_parts: int, n_src_parts: int,
-              sparse: bool = True, pad_multiple: int = 8) -> TileSet:
-    """Grid-based tiling; ``sparse=False`` reproduces regular tiling."""
+              sparse: bool = True, pad_multiple: int = 8,
+              layout: str = "coo") -> TileSet:
+    """Grid-based tiling; ``sparse=False`` reproduces regular tiling.
+
+    ``layout="csr"`` post-converts the tile batch via :func:`csr_tiles`.
+    """
+    if layout not in ("coo", "csr"):
+        raise ValueError(f"unknown tile layout {layout!r}")
     V, E = graph.n_vertices, graph.n_edges
     db = _even_bounds(V, n_dst_parts)
     sb = _even_bounds(V, n_src_parts)
@@ -184,13 +207,48 @@ def grid_tile(graph: Graph, n_dst_parts: int, n_src_parts: int,
         edge_gid[i, :m] = r["egid"]
         n_src[i], n_edge[i], part_id[i] = k, m, r["p"]
 
-    return TileSet(
+    ts = TileSet(
         src_ids=src_ids, edge_src=edge_src, edge_dst=edge_dst, edge_gid=edge_gid,
         n_src=n_src, n_edge=n_edge, part_id=part_id,
         part_start=db[:-1].astype(np.int32),
         part_size=np.diff(db).astype(np.int32),
         n_dst_parts=n_dst_parts, n_src_parts=n_src_parts, sparse=sparse,
         n_vertices=V, n_edges=E)
+    return csr_tiles(ts) if layout == "csr" else ts
+
+
+def csr_tiles(tiles: TileSet) -> TileSet:
+    """Convert a COO tile batch to CSR-within-tile layout (§5.3 / ROADMAP 3).
+
+    Per tile, the *real* edge slots ``[:n_edge]`` are stably sorted by local
+    destination row — ``edge_src``/``edge_dst``/``edge_gid`` are permuted
+    together, so ``edge_src[t, row_ptr[t, d]:row_ptr[t, d+1]]`` is dst row
+    ``d``'s contiguous column-index run.  ``row_ptr`` is (T, D_max+1) with
+    ``D_max = part_size.max()``; rows past a tile's partition size (and all
+    rows of zero-edge filler tiles) get empty ``[ptr, ptr)`` runs.  Padded
+    edge slots stay after ``row_ptr[t, -1] == n_edge[t]`` where no row
+    pointer can reach them, so CSR kernels need no tail masking.
+    """
+    if tiles.layout == "csr":
+        return tiles
+    T = tiles.n_tiles
+    dmax = int(tiles.part_size.max()) if tiles.part_size.size else 1
+    edge_src = tiles.edge_src.copy()
+    edge_dst = tiles.edge_dst.copy()
+    edge_gid = tiles.edge_gid.copy()
+    row_ptr = np.zeros((T, dmax + 1), np.int32)
+    for t in range(T):
+        ne = int(tiles.n_edge[t])
+        if ne == 0:
+            continue
+        perm = np.argsort(edge_dst[t, :ne], kind="stable")
+        edge_src[t, :ne] = edge_src[t, perm]
+        edge_gid[t, :ne] = edge_gid[t, perm]
+        edge_dst[t, :ne] = edge_dst[t, perm]
+        counts = np.bincount(edge_dst[t, :ne], minlength=dmax)
+        row_ptr[t, 1:] = np.cumsum(counts[:dmax]).astype(np.int32)
+    return dataclasses.replace(tiles, edge_src=edge_src, edge_dst=edge_dst,
+                               edge_gid=edge_gid, layout="csr", row_ptr=row_ptr)
 
 
 @dataclasses.dataclass
@@ -239,6 +297,10 @@ class BucketedTileSet:
     @property
     def sparse(self) -> bool:
         return self.source.sparse
+
+    @property
+    def layout(self) -> str:
+        return self.source.layout
 
     @property
     def n_vertices(self) -> int:
@@ -303,7 +365,9 @@ def _repack(tiles: TileSet, idx: np.ndarray, pad_multiple: int) -> TileSet:
         part_id=tiles.part_id[idx].copy(),
         part_start=tiles.part_start, part_size=tiles.part_size,
         n_dst_parts=tiles.n_dst_parts, n_src_parts=tiles.n_src_parts,
-        sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges)
+        sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges,
+        layout=tiles.layout,
+        row_ptr=None if tiles.row_ptr is None else tiles.row_ptr[idx].copy())
 
 
 def bucket_tiles(tiles: TileSet, n_buckets: int = 4,
@@ -395,6 +459,10 @@ def pad_tileset(tiles: TileSet, n_tiles: int, s_max: int, e_max: int) -> TileSet
         out[:T] = a
         return out
 
+    # filler tiles get an all-zero row_ptr: every CSR row run is [0, 0) —
+    # the correct empty-tile contribution under the FIRST/LAST protocol
+    row_ptr = (None if tiles.row_ptr is None
+               else grow(tiles.row_ptr, tiles.row_ptr.shape[1]))
     return TileSet(
         src_ids=grow(tiles.src_ids, s_max),
         edge_src=grow(tiles.edge_src, e_max),
@@ -404,7 +472,8 @@ def pad_tileset(tiles: TileSet, n_tiles: int, s_max: int, e_max: int) -> TileSet
         part_id=grow1(tiles.part_id, fill=tiles.n_dst_parts - 1),
         part_start=tiles.part_start, part_size=tiles.part_size,
         n_dst_parts=tiles.n_dst_parts, n_src_parts=tiles.n_src_parts,
-        sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges)
+        sparse=tiles.sparse, n_vertices=tiles.n_vertices, n_edges=tiles.n_edges,
+        layout=tiles.layout, row_ptr=row_ptr)
 
 
 @dataclasses.dataclass
@@ -507,7 +576,8 @@ def plan_shards(tiles, n_shards: int, mode: str = "cost") -> ShardPlan:
 
 def build_tiles(graph: Graph, n_dst_parts: int, n_src_parts: int, *,
                 sparse: bool = True, pad_multiple: int = 8,
-                reorder: Optional[str] = None, n_buckets: Optional[int] = None):
+                reorder: Optional[str] = None, n_buckets: Optional[int] = None,
+                layout: str = "coo"):
     """One-stop tiling entry: optional degree reordering + grid tiling
     (+ size bucketing).
 
@@ -517,6 +587,8 @@ def build_tiles(graph: Graph, n_dst_parts: int, n_src_parts: int, *,
     low-id partitions shrinks the sparse tiles elsewhere, which also tightens
     the padded (S_max, E_max) envelope the static-shape executors pay for.
     ``n_buckets`` additionally post-bins tiles via :func:`bucket_tiles`.
+    ``layout="csr"`` converts each tile to CSR-within-tile storage
+    (:func:`csr_tiles`) before any bucketing.
 
     Returns ``(tiles, reordering)`` — run with ``reordering.graph`` and
     permute features in / outputs back through the
@@ -525,14 +597,14 @@ def build_tiles(graph: Graph, n_dst_parts: int, n_src_parts: int, *,
     """
     from . import reorder as R
 
-    if reorder is None:
+    if reorder in (None, "identity"):
         ro = R.identity_order(graph)
     elif reorder in ("degree", "in", "out"):
         ro = R.degree_sort(graph, by="out" if reorder == "out" else "in")
     else:
         raise ValueError(f"unknown reorder mode {reorder!r}")
     tiles = grid_tile(ro.graph, n_dst_parts, n_src_parts, sparse=sparse,
-                      pad_multiple=pad_multiple)
+                      pad_multiple=pad_multiple, layout=layout)
     if n_buckets is not None:
         tiles = bucket_tiles(tiles, n_buckets, pad_multiple=pad_multiple)
     return tiles, ro

@@ -60,7 +60,8 @@ class GnnTrace:
         return max(self.layer_of.values(), default=0) + 1
 
     def emit(self, op: str, space: str, inputs: Sequence[int], dim: int, **attrs) -> "TT":
-        node = TNode(id=len(self.nodes), op=op, space=space, inputs=list(inputs), attrs=dict(attrs), dim=dim)
+        node = TNode(id=len(self.nodes), op=op, space=space,
+                     inputs=list(inputs), attrs=dict(attrs), dim=dim)
         self.nodes.append(node)
         self.layer_of[node.id] = self._layer
         return TT(self, node.id)

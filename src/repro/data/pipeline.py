@@ -51,10 +51,12 @@ class TokenPipeline:
         if self.cfg.family == "vlm":
             emb = (_mix(ctr[: B * VLM_PATCHES * 4]).astype(np.float32) / 2**64 - 0.5)
             out["tokens"] = toks[:, : S - VLM_PATCHES]
-            out["patch_embeds"] = np.resize(emb, (B, VLM_PATCHES, self.cfg.d_model)).astype(np.float32)
+            out["patch_embeds"] = np.resize(
+                emb, (B, VLM_PATCHES, self.cfg.d_model)).astype(np.float32)
         if self.cfg.family == "audio":
             fr = (_mix(ctr[: B * 16]).astype(np.float32) / 2**64 - 0.5)
-            out["frames"] = np.resize(fr, (B, self.cfg.enc_len, self.cfg.d_model)).astype(np.float32)
+            out["frames"] = np.resize(
+                fr, (B, self.cfg.enc_len, self.cfg.d_model)).astype(np.float32)
         return out
 
     def shard_for(self, step: int, host: int, n_hosts: int) -> Dict[str, np.ndarray]:

@@ -36,8 +36,10 @@ class Graph:
 
     def validate(self) -> None:
         assert self.src.shape == self.dst.shape
-        assert self.src.min(initial=0) >= 0 and (self.n_edges == 0 or self.src.max() < self.n_vertices)
-        assert self.dst.min(initial=0) >= 0 and (self.n_edges == 0 or self.dst.max() < self.n_vertices)
+        assert self.src.min(initial=0) >= 0 and (
+            self.n_edges == 0 or self.src.max() < self.n_vertices)
+        assert self.dst.min(initial=0) >= 0 and (
+            self.n_edges == 0 or self.dst.max() < self.n_vertices)
 
     def sorted_by_dst(self) -> "Graph":
         order = np.lexsort((self.src, self.dst))

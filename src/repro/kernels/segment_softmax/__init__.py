@@ -4,6 +4,9 @@ Implementation lives beside the tile-SpMM kernel (same block-dense tile
 layout, shared scalar-prefetch metadata); this package re-exports it under
 the kernel taxonomy's name.
 """
-from ..tile_spmm.kernel import segment_softmax_pallas  # noqa: F401
-from ..tile_spmm.ref import segment_softmax_ref        # noqa: F401
-from ..tile_spmm.ops import densify_edge_scores, gat_aggregate  # noqa: F401
+from ..tile_spmm.kernel import (segment_softmax_csr_pallas,  # noqa: F401
+                                segment_softmax_pallas)      # noqa: F401
+from ..tile_spmm.ref import (segment_softmax_csr_ref,        # noqa: F401
+                             segment_softmax_ref)            # noqa: F401
+from ..tile_spmm.ops import (densify_edge_scores,            # noqa: F401
+                             gat_aggregate, gat_aggregate_csr)  # noqa: F401

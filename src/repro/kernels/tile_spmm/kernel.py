@@ -115,6 +115,144 @@ def _softmax_kernel(flags_ref, part_ref, s_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# CSR-within-tile variants (§5.3 / ROADMAP 3): instead of densifying into a
+# (D, S) adjacency block, the kernel walks per-tile row pointers.  Edge
+# columns are gathered once into an (E, F) block and a row-selector matrix —
+# sel[d, e] = 1 iff row_ptr[d] <= e < row_ptr[d+1] — reduces it on the MXU.
+# Padded edge slots sit at e >= row_ptr[-1] where no row's run reaches, so
+# no tail masking is needed; index traffic shrinks from 2 int32 per edge
+# (COO pair) to 1 per edge + one (D+1) pointer table per tile.
+# ---------------------------------------------------------------------------
+
+def _csr_row_select(rp, n_rows: int, n_cols: int):
+    """(D, E) float32 selector: sel[d, e] = 1 iff e is in dst row d's run."""
+    eidx = jax.lax.broadcasted_iota(jnp.int32, (n_rows, n_cols), 1)
+    lo = rp[:-1][:, None]
+    hi = rp[1:][:, None]
+    return (eidx >= lo) & (eidx < hi)
+
+
+def _csr_kernel(flags_ref, part_ref, rp_ref, col_ref, w_ref, x_ref,
+                o_ref, acc_ref):
+    t = pl.program_id(0)
+    flags = flags_ref[t]
+
+    @pl.when(flags & FIRST != 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rp = rp_ref[0]                                 # (D+1,)
+    col = col_ref[0]                               # (E,) local src index
+    w = w_ref[0].astype(jnp.float32)               # (E,) edge weights
+    x = x_ref[0].astype(jnp.float32)               # (S, F)
+    gathered = w[:, None] * jnp.take(x, col, axis=0)   # (E, F)
+    D = acc_ref.shape[0]
+    E = col.shape[0]
+    sel = _csr_row_select(rp, D, E).astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(sel, gathered,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(flags & LAST != 0)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "interpret"))
+def tile_spmm_csr_pallas(row_ptr, col, w, xsrc, part_id, flags, *,
+                         n_parts: int, interpret: bool = True):
+    """CSR tile SpMM: row_ptr (T, D+1); col/w (T, E); xsrc (T, S, F).
+
+    ``col`` is the tile-local source index per edge (CSR-ordered
+    ``edge_src``); ``w`` carries per-edge weights (ones for a pure gather).
+    Returns (P, D, F); tiles must be partition-major."""
+    T, E = col.shape
+    D = row_ptr.shape[1] - 1
+    S, F = xsrc.shape[-2:]
+    out = pl.pallas_call(
+        _csr_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((1, D + 1), lambda t, flags, part: (t, 0)),
+                pl.BlockSpec((1, E), lambda t, flags, part: (t, 0)),
+                pl.BlockSpec((1, E), lambda t, flags, part: (t, 0)),
+                pl.BlockSpec((1, S, F), lambda t, flags, part: (t, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, D, F), lambda t, flags, part: (part[t], 0, 0)),
+            scratch_shapes=[pltpu.VMEM((D, F), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_parts, D, F), xsrc.dtype),
+        interpret=interpret,
+    )(flags.astype(jnp.int32), part_id.astype(jnp.int32),
+      row_ptr.astype(jnp.int32), col.astype(jnp.int32), w, xsrc)
+    return out
+
+
+def _csr_softmax_kernel(flags_ref, part_ref, rp_ref, s_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref):
+    t = pl.program_id(0)
+    flags = flags_ref[t]
+
+    @pl.when(flags & FIRST != 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    rp = rp_ref[0]                                 # (D+1,)
+    s_e = s_ref[0].astype(jnp.float32)             # (E,) per-edge scores
+    v = v_ref[0].astype(jnp.float32)               # (E, F) per-edge values
+    D = acc_ref.shape[0]
+    E = s_e.shape[0]
+    sel = _csr_row_select(rp, D, E)
+    s = jnp.where(sel, s_e[None, :], -1e30)        # (D, E)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(sel, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(flags & LAST != 0)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts", "interpret"))
+def segment_softmax_csr_pallas(row_ptr, scores, vals, part_id, flags, *,
+                               n_parts: int, interpret: bool = True):
+    """CSR single-pass segment softmax: row_ptr (T, D+1); scores (T, E);
+    vals (T, E, F) per-edge source values (already gathered)."""
+    T, E = scores.shape
+    D = row_ptr.shape[1] - 1
+    F = vals.shape[-1]
+    out = pl.pallas_call(
+        _csr_softmax_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((1, D + 1), lambda t, flags, part: (t, 0)),
+                pl.BlockSpec((1, E), lambda t, flags, part: (t, 0)),
+                pl.BlockSpec((1, E, F), lambda t, flags, part: (t, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, D, F), lambda t, flags, part: (part[t], 0, 0)),
+            scratch_shapes=[pltpu.VMEM((D, F), jnp.float32),
+                            pltpu.VMEM((D, 1), jnp.float32),
+                            pltpu.VMEM((D, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_parts, D, F), vals.dtype),
+        interpret=interpret,
+    )(flags.astype(jnp.int32), part_id.astype(jnp.int32),
+      row_ptr.astype(jnp.int32), scores, vals)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("n_parts", "interpret"))
 def segment_softmax_pallas(scores, vals, part_id, flags, *, n_parts: int,
                            interpret: bool = True):

@@ -3,8 +3,9 @@ configuration is a first-class performance lever, searched per graph class
 rather than fixed).
 
 Searches the tile-config lattice — grid (``n_dst_parts`` x ``n_src_parts``)
-x ``n_buckets`` x shard count — for one compiled program over a
-representative graph of a class.  The harness repurposes the
+x ``n_buckets`` x shard count x vertex ``reorder`` (identity / degree,
+paper §5.3) x within-tile edge ``layout`` (COO / CSR) — for one compiled
+program over a representative graph of a class.  The harness repurposes the
 ``launch/hillclimb.py`` pattern (variant -> scored JSON-able record,
 deltas against a baseline) for this lattice:
 
@@ -37,9 +38,9 @@ import numpy as np
 
 from ..core import compiler as C
 from ..core import isa
+from ..core import tiling
 from ..core.simulator import simulate_sharded
 from ..core.streams import HWConfig
-from ..core.tiling import bucket_tiles, grid_tile
 from ..gnn.graphs import Graph
 
 #: ladder per search dimension — one hill-climb step moves to the adjacent
@@ -47,6 +48,10 @@ from ..gnn.graphs import Graph
 _PART_LADDER = (2, 4, 8, 16, 32, 64)
 _BUCKET_LADDER = (1, 2, 4, 8)
 _SHARD_LADDER = (1, 2, 4, 8)
+#: categorical dimensions — the hill-climb move set offers a toggle to every
+#: other choice (paper §5.3 degree sorting; CSR-within-tile edge storage)
+_REORDER_CHOICES = ("identity", "degree")
+_LAYOUT_CHOICES = ("coo", "csr")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,22 +61,40 @@ class TileConfig:
     n_src_parts: int = 8
     n_buckets: int = 4
     n_shards: int = 1
+    #: vertex order fed to the tiler ("identity" | "degree")
+    reorder: str = "identity"
+    #: within-tile edge storage ("coo" | "csr")
+    layout: str = "coo"
 
-    def key(self) -> Tuple[int, int, int, int]:
+    def __post_init__(self):
+        if self.reorder not in _REORDER_CHOICES:
+            raise ValueError(f"unknown reorder mode {self.reorder!r}")
+        if self.layout not in _LAYOUT_CHOICES:
+            raise ValueError(f"unknown tile layout {self.layout!r}")
+
+    def key(self) -> Tuple[int, int, int, int, str, str]:
         """Hashable identity used to dedupe trials during the search."""
         return (self.n_dst_parts, self.n_src_parts,
-                self.n_buckets, self.n_shards)
+                self.n_buckets, self.n_shards, self.reorder, self.layout)
 
-    def to_dict(self) -> Dict[str, int]:
+    def to_dict(self) -> Dict[str, object]:
         """JSON-able field dict (inverse of :meth:`from_dict`)."""
         return dataclasses.asdict(self)
 
     @classmethod
-    def from_dict(cls, d: Dict[str, int]) -> "TileConfig":
-        """Rebuild a config from :meth:`to_dict` output (values coerced
-        to int, so JSON round-trips are exact)."""
-        return cls(**{f.name: int(d[f.name])
-                      for f in dataclasses.fields(cls)})
+    def from_dict(cls, d: Dict[str, object]) -> "TileConfig":
+        """Rebuild a config from :meth:`to_dict` output.  Numeric fields are
+        coerced to int so JSON round-trips are exact; the categorical
+        reorder/layout fields stay strings.  Records written before those
+        fields existed load with their defaults (identity/COO — exactly what
+        those tunings searched)."""
+        vals: Dict[str, object] = {}
+        for f in dataclasses.fields(cls):
+            if f.name not in d:
+                continue
+            v = d[f.name]
+            vals[f.name] = str(v) if isinstance(f.default, str) else int(v)
+        return cls(**vals)
 
 
 @dataclasses.dataclass
@@ -109,18 +132,26 @@ class TuneResult:
 
 
 def build_tiles(graph: Graph, cfg: TileConfig):
-    """The tile batch a config realizes (sparse grid tiling + bucketing)."""
-    ts = grid_tile(graph, cfg.n_dst_parts, cfg.n_src_parts, sparse=True)
-    return bucket_tiles(ts, cfg.n_buckets) if cfg.n_buckets > 1 else ts
+    """The tile batch a config realizes (optional degree reorder + sparse
+    grid tiling in the config's edge layout + bucketing).  Returns
+    ``(tiles, reordering)``; run against ``reordering.graph`` and permute
+    vertex IO through the :class:`~repro.core.reorder.Reordering`."""
+    return tiling.build_tiles(
+        graph, cfg.n_dst_parts, cfg.n_src_parts, sparse=True,
+        reorder=cfg.reorder, layout=cfg.layout,
+        n_buckets=cfg.n_buckets if cfg.n_buckets > 1 else None)
 
 
 def padded_cost(compiled: C.CompiledGNN, graph: Graph, cfg: TileConfig,
                 hw: Optional[HWConfig] = None,
                 kernel_dispatch: bool = True) -> Trial:
     """Cheap objective: simulated padded cycles of the (kernel-dispatch)
-    schedule under this config's tile batch and shard count."""
-    sde = isa.emit_sde(compiled.schedule(kernel_dispatch))
-    tiles = build_tiles(graph, cfg)
+    schedule under this config's tile batch and shard count.  The SDE
+    templates are emitted for the config's edge layout, so CSR trials are
+    costed with the E-proportional gather model rather than the dense
+    per-tile matmul."""
+    sde = isa.emit_sde(compiled.schedule(kernel_dispatch), layout=cfg.layout)
+    tiles, _ = build_tiles(graph, cfg)
     r = simulate_sharded(sde, tiles, hw or HWConfig(), n_chips=cfg.n_shards,
                          padded=True)
     return Trial(config=cfg, cycles=int(r.cycles), balance=float(r.balance),
@@ -138,11 +169,14 @@ def _step(ladder: Sequence[int], value: int, direction: int,
     return nxt if cap is None or nxt <= cap else None
 
 
-def neighbors(cfg: TileConfig, graph: Graph,
-              max_shards: int = 8) -> List[TileConfig]:
-    """One ladder step in each dimension and direction (the hill-climb
-    move set).  Grid dimensions are capped by the vertex count so a tiny
-    class can't tile onto more partitions than vertices."""
+def neighbors(cfg: TileConfig, graph: Graph, max_shards: int = 8,
+              kernel_dispatch: bool = True) -> List[TileConfig]:
+    """One ladder step in each dimension and direction plus one toggle per
+    categorical dimension (the hill-climb move set).  Grid dimensions are
+    capped by the vertex count so a tiny class can't tile onto more
+    partitions than vertices.  The CSR layout toggle is only offered for
+    kernel-dispatch schedules — the scan engine consumes the dense per-tile
+    adjacency that CSR storage deliberately drops."""
     out: List[TileConfig] = []
     pcap = max(2, graph.n_vertices)
     for d in (-1, 1):
@@ -154,6 +188,13 @@ def neighbors(cfg: TileConfig, graph: Graph,
             nxt = _step(ladder, getattr(cfg, field), d, cap)
             if nxt is not None:
                 out.append(dataclasses.replace(cfg, **{field: nxt}))
+    toggles = [("reorder", _REORDER_CHOICES)]
+    if kernel_dispatch:
+        toggles.append(("layout", _LAYOUT_CHOICES))
+    for field, choices in toggles:
+        for alt in choices:
+            if alt != getattr(cfg, field):
+                out.append(dataclasses.replace(cfg, **{field: alt}))
     return out
 
 
@@ -181,7 +222,9 @@ def hillclimb(compiled: C.CompiledGNN, graph: Graph,
 
     cur = ev(start or TileConfig())
     while len(seen) < max_evals:
-        cand = [ev(n) for n in neighbors(cur.config, graph, max_shards)
+        cand = [ev(n)
+                for n in neighbors(cur.config, graph, max_shards,
+                                   kernel_dispatch=kernel_dispatch)
                 if len(seen) < max_evals or n.key() in seen]
         better = [t for t in cand if t.cycles < cur.cycles]
         if not better:
@@ -207,14 +250,16 @@ def confirm_wallclock(compiled: C.CompiledGNN, graph: Graph,
     confirmed: List[Trial] = []
     for t in list(trials)[:max(1, top)]:
         cfg = t.config
-        tiles = build_tiles(graph, cfg)
+        tiles, ro = build_tiles(graph, cfg)
         n_dev = min(cfg.n_shards, n_dev_avail)
         if n_dev > 1:
-            runner = ShardedRunner(compiled, graph, tiles, n_dev,
-                                   kernel_dispatch=kernel_dispatch)
+            runner = ShardedRunner(compiled, ro.graph, tiles, n_dev,
+                                   kernel_dispatch=kernel_dispatch,
+                                   reordering=ro)
         else:
-            runner = PipelinedRunner(compiled, graph, tiles,
-                                     kernel_dispatch=kernel_dispatch)
+            runner = PipelinedRunner(compiled, ro.graph, tiles,
+                                     kernel_dispatch=kernel_dispatch,
+                                     reordering=ro)
         jax.block_until_ready(runner(inputs, params))        # compile+warm
         times = []
         for _ in range(max(1, repeats)):
@@ -344,7 +389,7 @@ def tune_for_class(compiled: C.CompiledGNN, graph: Graph, class_key, *,
         sp = compiled.schedule(kernel_dispatch)
         tags = tuple(sorted({g.kernel for ph in sp.phases
                              for g in ph.gathers} - {S.KERNEL_SCAN}))
-        sig = shard_layout_signature(build_tiles(graph, cfg),
+        sig = shard_layout_signature(build_tiles(graph, cfg)[0],
                                      max(1, cfg.n_shards),
                                      kernel_dispatch=kernel_dispatch,
                                      kernels=tags)

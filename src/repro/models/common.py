@@ -36,7 +36,8 @@ def resolve_spec(spec: Tuple, mesh) -> P:
     out = []
     for s in spec:
         if s == DP:
-            out.append(batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None))
+            out.append(batch_axes if len(batch_axes) > 1
+                       else (batch_axes[0] if batch_axes else None))
         elif s == DPM:
             out.append(all_axes if len(all_axes) > 1 else (all_axes[0] if all_axes else None))
         else:

@@ -163,7 +163,8 @@ def mamba2_block(cfg: ArchConfig, p: Dict, x: Array, *, mesh=None,
         Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
         dt0 = dt[:, 0]                                  # (B,nh)
         xdt = xs[:, 0].astype(jnp.float32) * dt0[..., None]  # (B,nh,hd)
-        h = h * jnp.exp(dt0 * A)[:, :, None, None] + jnp.einsum("bhd,bhn->bhdn", xdt, Bh.astype(jnp.float32))
+        h = h * jnp.exp(dt0 * A)[:, :, None, None] + jnp.einsum(
+            "bhd,bhn->bhdn", xdt, Bh.astype(jnp.float32))
         y = jnp.einsum("bhdn,bhn->bhd", h, Ch.astype(jnp.float32))[:, None]
         new_state = {"ssm": h, "conv": new_conv}
     y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]

@@ -190,4 +190,5 @@ def gelu_ffn_template(cfg: ArchConfig) -> Dict:
 
 
 def gelu_ffn(p: Dict, x: Array) -> Array:
-    return jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(jnp.float32)).astype(x.dtype) @ p["w2"] + p["b2"]
+    h = jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ p["w2"] + p["b2"]

@@ -27,7 +27,6 @@ from ..core import compiler as C
 from ..core import schedule as S
 from ..core.pipeline import (PipelinedRunner, ShardedRunner,
                              shard_layout_signature)
-from ..core.tiling import bucket_tiles, quantize_buckets
 from ..gnn import models as M
 from ..gnn.graphs import Graph, batch_graphs
 from .cache import ProgramCache
@@ -67,12 +66,14 @@ class InferenceServer:
     gather blocks inside ``shard_map`` when it is on.
 
     ``tune_cache`` (a :class:`~repro.launch.autotune.TuneCache`) routes size
-    classes with a tuned entry onto the tuned tile config: the tuned grid
-    replaces :func:`~repro.serve.signature.serving_grid`, the canonical tile
-    batch is size-bucketed (bucket maxima snapped to powers of two for shape
-    stability), and the tuned shard count caps the mesh size.  Tuned and
-    default registrations/cache keys never alias — both carry the tuned
-    config key.
+    classes with a tuned entry onto the tuned tile config: the tuned grid,
+    vertex reorder, and edge layout replace the
+    :func:`~repro.serve.signature.serving_grid` defaults, the canonical
+    tile batch is size-bucketed with registry-managed per-bucket caps
+    (monotone growth, so bucketed shapes converge instead of flaking at
+    power-of-two boundaries), and the tuned shard count caps the mesh
+    size.  Tuned and default registrations/cache keys never alias — both
+    carry the tuned config key, including its reorder/layout fields.
     """
 
     def __init__(self, model: Union[str, C.CompiledGNN],
@@ -238,21 +239,20 @@ class InferenceServer:
             tuned = self.tune_cache.get(
                 program_key(self.compiled, self.kernel_dispatch), class_key)
         if tuned is not None:
-            # tuned route: tuned grid + size-bucketed tile batch; the
-            # registration key carries the config so default and tuned
+            # tuned route: tuned grid + reorder + edge layout +
+            # size-bucketed tile batch; the registration key carries the
+            # config (reorder/layout included) so default and tuned
             # canonical shapes of one class never alias
             tuned_key = ("tuned",) + tuned.key()
-            merged_graph, tiles, E_pad = self.shapes.canonical(
+            merged_graph, tiles, E_pad, ro = self.shapes.canonical(
                 class_key + (tuned_key,), batch.graph,
-                grid=(tuned.n_dst_parts, tuned.n_src_parts))
-            if tuned.n_buckets > 1:
-                tiles = quantize_buckets(
-                    bucket_tiles(tiles, tuned.n_buckets),
-                    self.shapes.pad_multiple)
+                grid=(tuned.n_dst_parts, tuned.n_src_parts),
+                reorder=tuned.reorder, layout=tuned.layout,
+                n_buckets=tuned.n_buckets)
         else:
             tuned_key = ()
-            merged_graph, tiles, E_pad = self.shapes.canonical(class_key,
-                                                               batch.graph)
+            merged_graph, tiles, E_pad, ro = self.shapes.canonical(
+                class_key, batch.graph)
         V_pad = merged_graph.n_vertices
 
         sp = self.compiled.schedule(self.kernel_dispatch)
@@ -273,31 +273,38 @@ class InferenceServer:
         if n_dev > 1:
             # sharded route over an n_dev mesh, kernel dispatch honored
             # inside shard_map; key carries the mesh size, the realized
-            # shard layout, the dispatch flag, and the tuned config
+            # shard layout, the dispatch flag, the reorder mode, and the
+            # tuned config.  The runner holds the graph/tiles in reordered
+            # vertex space; requests stay in original ids and the rebind
+            # ships the permutation as a replicated traced operand.
             key = structure_signature(self.compiled, tiles, E_pad,
-                                      self.kernel_dispatch) + (
+                                      self.kernel_dispatch,
+                                      reorder=ro.mode) + (
                 shard_layout_signature(tiles, n_dev, mode="contiguous",
                                        quantize_tile_cap=True,
                                        kernel_dispatch=self.kernel_dispatch,
                                        kernels=self._kernel_tags),
                 tuned_key)
             runner = self.cache.get_or_build(
-                key, lambda: ShardedRunner(self.compiled, merged_graph, tiles,
+                key, lambda: ShardedRunner(self.compiled, ro.graph, tiles,
                                            n_dev, mode="contiguous",
                                            quantize_tile_cap=True,
-                                           kernel_dispatch=self.kernel_dispatch),
+                                           kernel_dispatch=self.kernel_dispatch,
+                                           reordering=ro),
                 owner=self.cache_owner)
             with self._stats_lock:
                 self._sharded_batches += 1
         else:
             key = structure_signature(self.compiled, tiles, E_pad,
-                                      self.kernel_dispatch) + (tuned_key,)
+                                      self.kernel_dispatch,
+                                      reorder=ro.mode) + (tuned_key,)
             runner = self.cache.get_or_build(
-                key, lambda: PipelinedRunner(self.compiled, merged_graph, tiles,
+                key, lambda: PipelinedRunner(self.compiled, ro.graph, tiles,
                                              kernel_dispatch=self.kernel_dispatch,
-                                             donate_inputs=self.donate_inputs),
+                                             donate_inputs=self.donate_inputs,
+                                             reordering=ro),
                 owner=self.cache_owner)
-        outs = runner.run_with(tiles, merged_inputs, params)
+        outs = runner.run_with(tiles, merged_inputs, params, reordering=ro)
         with self._stats_lock:
             self._batches_run += 1
 

@@ -26,7 +26,8 @@ import threading
 from typing import Dict, Hashable, Optional, Tuple, Union
 
 from ..core import compiler as C
-from ..core.tiling import BucketedTileSet, TileSet, grid_tile, pad_tileset
+from ..core.tiling import (BucketedTileSet, TileSet, bucket_tiles, grid_tile,
+                           pad_tileset)
 from ..gnn.graphs import Graph, pad_graph
 
 
@@ -109,16 +110,35 @@ class ShapeRegistry:
         return len(self._shapes)
 
     def canonical(self, key: Hashable, graph: Graph,
-                  grid: Optional[Tuple[int, int]] = None
-                  ) -> Tuple[Graph, TileSet, int]:
+                  grid: Optional[Tuple[int, int]] = None,
+                  reorder: Optional[str] = None, layout: str = "coo",
+                  n_buckets: Optional[int] = None
+                  ) -> Tuple[Graph, Union[TileSet, BucketedTileSet], int,
+                             "Reordering"]:
         """Pad ``graph`` and its tile batch onto the class's registered
-        shapes; returns (padded graph, padded tiles, padded edge-row count).
-        ``grid`` overrides the deterministic :func:`serving_grid` choice —
-        the autotuned-config route; callers must then key the registration
-        by the tuned config too, so default and tuned shapes never alias.
+        shapes; returns (padded graph, padded tiles, padded edge-row count,
+        reordering).  ``grid`` overrides the deterministic
+        :func:`serving_grid` choice — the autotuned-config route; callers
+        must then key the registration by the tuned config too, so default
+        and tuned shapes never alias.  ``reorder``/``layout`` select the
+        paper §5.3 degree sort and the within-tile edge storage: the degree
+        permutation is computed over the *padded* graph (filler vertices are
+        degree-0 and sink to the tail), the returned
+        :class:`~repro.core.reorder.Reordering` maps request-order vertex IO
+        into/out of the runner, and the tiles are built over the reordered
+        graph — callers keying registrations by the tuned config therefore
+        also key them by reorder + layout.  ``n_buckets > 1`` additionally
+        size-buckets the padded batch with *registered* per-bucket column
+        caps: bucket tile counts are a pure function of the registered tile
+        count, and the caps grow monotonically exactly like the raw tile
+        dims, so bucketed shapes cannot flake across requests the way bare
+        power-of-two snapping does when a realized bucket maximum straddles
+        a boundary (degree reordering makes that variance routine).
         Thread-safe: concurrent calls for one class serialize, so the
         registered dimensions only ever grow.
         """
+        from ..core import reorder as R
+
         with self._lock:
             grow = 1.0 + self.headroom
             entry = self._shapes.setdefault(
@@ -129,10 +149,17 @@ class ShapeRegistry:
             if E > entry["e_rows"]:
                 entry["e_rows"] = _round_up(E * grow, 64)
             padded = pad_graph(graph, entry["v_pad"])
+            if reorder in (None, "identity"):
+                ro = R.identity_order(padded)
+            elif reorder in ("degree", "in", "out"):
+                ro = R.degree_sort(padded,
+                                   by="out" if reorder == "out" else "in")
+            else:
+                raise ValueError(f"unknown reorder mode {reorder!r}")
             if grid is None:
                 grid = serving_grid(entry["v_pad"], self.target_part)
-            raw = grid_tile(padded, grid[0], grid[1], sparse=True,
-                            pad_multiple=self.pad_multiple)
+            raw = grid_tile(ro.graph, grid[0], grid[1], sparse=True,
+                            pad_multiple=self.pad_multiple, layout=layout)
             T, s, e = entry["tile"]
             if raw.n_tiles > T:
                 T = _round_up(raw.n_tiles * grow, 2)
@@ -143,19 +170,43 @@ class ShapeRegistry:
             if raw.e_max > e:
                 e = _round_up(raw.e_max * grow, self.pad_multiple)
             entry["tile"] = (T, s, e)
-            return padded, pad_tileset(raw, T, s, e), entry["e_rows"]
+            ts = pad_tileset(raw, T, s, e)
+            if n_buckets is None or n_buckets <= 1:
+                return padded, ts, entry["e_rows"], ro
+            bt = bucket_tiles(ts, n_buckets, pad_multiple=self.pad_multiple)
+            caps = entry.setdefault("buckets", {}).setdefault(n_buckets, [])
+            grown = []
+            for i, b in enumerate(bt.buckets):
+                if i >= len(caps):
+                    caps.append((0, 0))
+                cs, ce = caps[i]
+                if b.s_max > cs:
+                    cs = _round_up(b.s_max * grow, self.pad_multiple)
+                if b.e_max > ce:
+                    ce = _round_up(b.e_max * grow, self.pad_multiple)
+                caps[i] = (cs, ce)
+                grown.append(pad_tileset(b, b.n_tiles, cs, ce))
+            bt = BucketedTileSet(buckets=grown,
+                                 tile_index=list(bt.tile_index),
+                                 source=bt.source)
+            return padded, bt, entry["e_rows"], ro
 
 
 def structure_signature(model: Union[str, C.CompiledGNN],
                         tiles: Union[TileSet, BucketedTileSet],
                         padded_edges: int = 0,
-                        kernel_dispatch: bool = True) -> Tuple:
+                        kernel_dispatch: bool = True,
+                        reorder: str = "identity") -> Tuple:
     """The compiled-program cache key: program structure + tile shapes +
     the padded edge-input row count (edge-space input arrays are traced, so
-    their length is a compilation input too).  Raw edge lists never enter.
+    their length is a compilation input too) + the vertex reorder mode.
+    Raw edge lists never enter.  The tile shape signature leads with the
+    edge layout and the runner's compiled permutation plumbing depends on
+    the reorder mode, so CSR/COO and identity/degree programs can never
+    alias one cache entry.
     """
     if isinstance(model, str):
         from ..gnn import models as M
         model = C.compile_gnn(M.trace_named(model))
     return (model.structure_signature(kernel_dispatch),
-            tiles.shape_signature(), int(padded_edges))
+            tiles.shape_signature(), int(padded_edges), str(reorder))

@@ -39,7 +39,7 @@ def _graph(v=200, e=800, seed=2):
 def test_tileconfig_and_trial_roundtrip():
     cfg = AT.TileConfig(16, 8, 2, 4)
     assert AT.TileConfig.from_dict(cfg.to_dict()) == cfg
-    assert cfg.key() == (16, 8, 2, 4)
+    assert cfg.key() == (16, 8, 2, 4, "identity", "coo")
     t = AT.padded_cost(_compiled("gcn")[1], _graph(), cfg)
     assert t.cycles > 0 and t.config is cfg
     assert t.to_dict()["config"] == cfg.to_dict()
@@ -50,9 +50,17 @@ def test_neighbors_step_one_ladder_rung_and_respect_caps():
     g = _graph()
     moves = AT.neighbors(cfg, g, max_shards=2)
     keys = {m.key() for m in moves}
-    assert (4, 8, 4, 1) in keys and (16, 8, 4, 1) in keys
-    assert (8, 8, 4, 2) in keys               # shards capped at 2...
-    assert (8, 8, 4, 4) not in keys           # ...so no 4-shard move
+    assert (4, 8, 4, 1, "identity", "coo") in keys
+    assert (16, 8, 4, 1, "identity", "coo") in keys
+    assert (8, 8, 4, 2, "identity", "coo") in keys    # shards capped at 2...
+    assert (8, 8, 4, 4, "identity", "coo") not in keys  # ...so no 4-shard move
+    # ...and one toggle per categorical dimension
+    assert (8, 8, 4, 1, "degree", "coo") in keys
+    assert (8, 8, 4, 1, "identity", "csr") in keys
+    # the scan engine needs the dense per-tile adjacency: no CSR move there
+    scan_moves = AT.neighbors(cfg, g, max_shards=2, kernel_dispatch=False)
+    assert all(m.layout == "coo" for m in scan_moves)
+    assert any(m.reorder == "degree" for m in scan_moves)
     # every move changes exactly one dimension by one rung
     for m in moves:
         assert sum(a != b for a, b in zip(m.key(), cfg.key())) == 1

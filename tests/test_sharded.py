@@ -9,7 +9,8 @@ with kernel dispatch ON (Pallas gather blocks inside ``shard_map``) and OFF
 CI sharded-smoke step forces 8 host devices so this is a REAL multi-device
 run there), and in a subprocess on a forced 8-host-device mesh across
 {1, 2, 4, 8}-shard meshes; (c) the lowered program contains exactly ONE
-cross-device collective per layer boundary, both schedule variants; (d) the multi-chip simulator cost model scales; (e) a
+cross-device collective per layer boundary, both schedule variants;
+(d) the multi-chip simulator cost model scales; (e) a
 hypothesis conformance sweep over random graphs × models × layers × ragged
 partition/bucket counts.
 """
@@ -128,6 +129,50 @@ def test_sharded_matches_pipelined_and_oracle(name, n_layers, dispatch):
                                  kernel_dispatch=dispatch)
     assert _rel_err(out_p[0], out_s[0]) < REL_TOL, (name, n_layers, dispatch)
     assert _rel_err(ref[0], out_s[0]) < REL_TOL, (name, n_layers, dispatch)
+
+
+@pytest.mark.parametrize("name", models.PAPER_MODELS)
+@pytest.mark.parametrize("n_layers", [1, 2])
+def test_layout_reorder_conformance_vs_oracle(name, n_layers):
+    """The full {CSR, COO} x {identity, degree} lattice the autotuner now
+    searches stays conformant with the dense whole-graph oracle — features
+    permuted in, outputs permuted back, Pallas CSR row-pointer walk and the
+    COO dense-tile matmul both within rel 1e-4, single- and multi-layer."""
+    g = graphs.random_graph(100, 400, seed=3, model="powerlaw",
+                            n_edge_types=3)
+    tr, c = _compiled(name, n_layers)
+    params = models.init_params(tr)
+    inputs = models.init_inputs(tr, g)
+    ref = executor.run_reference(tr, g, inputs, params)
+    for layout in ("coo", "csr"):
+        for mode in ("identity", "degree"):
+            ts, ro = tiling.build_tiles(g, 4, 4, reorder=mode,
+                                        layout=layout, n_buckets=2)
+            assert ts.layout == layout and ro.mode == mode
+            out = pipeline.run_pipelined(c, ro.graph, ts, inputs, params,
+                                         kernel_dispatch=True, reordering=ro)
+            assert _rel_err(ref[0], out[0]) < REL_TOL, \
+                (name, n_layers, layout, mode)
+
+
+def test_sharded_layout_reorder_conformance():
+    """CSR + degree reorder through the ShardedRunner (shard_map path, real
+    mesh under the CI sharded-smoke step): matches the oracle, and the
+    permutation operands ride along as plain replicated gathers — the
+    forced-8 subprocess census below pins that no extra collective
+    appears."""
+    g = graphs.random_graph(150, 600, seed=3, model="powerlaw",
+                            n_edge_types=3)
+    tr, c = _compiled("gcn", 2)
+    params = models.init_params(tr)
+    inputs = models.init_inputs(tr, g)
+    ref = executor.run_reference(tr, g, inputs, params)
+    ts, ro = tiling.build_tiles(g, 5, 5, reorder="degree", layout="csr",
+                                n_buckets=3)
+    out = pipeline.run_sharded(c, ro.graph, ts, inputs, params,
+                               n_devices=_avail_mesh(),
+                               kernel_dispatch=True, reordering=ro)
+    assert _rel_err(ref[0], out[0]) < REL_TOL
 
 
 def test_sharded_runner_bind_and_run_with():
@@ -353,6 +398,24 @@ _MESH_SCRIPT = textwrap.dedent("""
                     rec["collectives"] = len(re.findall(r"all-gather(?:-start)?\\(", hlo))
                     rec["n_layers"] = c.n_layers
                 out.append(rec)
+        # the tuned CSR + degree-reorder route on the full 8-device mesh:
+        # conformant, and the (order, rank) permutation operands are plain
+        # replicated gathers — the all-gather census must stay exactly
+        # n_layers, same as the identity/COO runs above
+        bt2, ro = tiling.build_tiles(g, 5, 5, reorder="degree",
+                                     layout="csr", n_buckets=3)
+        r = pipeline.ShardedRunner(c, ro.graph, bt2, 8,
+                                   kernel_dispatch=True, reordering=ro)
+        got = r(inputs, params)
+        err = float(np.max(np.abs(np.asarray(got[0]) - np.asarray(ref[0])))
+                    / max(1.0, float(np.max(np.abs(np.asarray(ref[0]))))))
+        rec = {"model": name, "n_dev": 8, "dispatch": True, "rel": err,
+               "reorder": "degree", "layout": "csr"}
+        if name in ("gcn", "gat"):
+            hlo = r.lower_text(inputs, params)
+            rec["collectives"] = len(re.findall(r"all-gather(?:-start)?\\(", hlo))
+            rec["n_layers"] = c.n_layers
+        out.append(rec)
     print(json.dumps(out))
 """)
 
@@ -384,11 +447,16 @@ def test_forced_mesh_conformance_and_collective_census():
                          capture_output=True, text=True, timeout=1800)
     assert out.returncode == 0, out.stderr[-3000:]
     recs = json.loads(out.stdout.strip().splitlines()[-1])
-    assert len(recs) == 35                    # 5 models x (4 scan + 3 kernel)
+    # 5 models x (4 scan + 3 kernel + 1 csr-degree-reorder)
+    assert len(recs) == 40
     for rec in recs:
         assert rec["rel"] < REL_TOL, rec
+    reordered = [rec for rec in recs if rec.get("reorder") == "degree"]
+    assert len(reordered) == 5 and all(rec["layout"] == "csr"
+                                       for rec in reordered)
     checked = [rec for rec in recs if "collectives" in rec]
-    assert len(checked) == 4, "gcn/gat x scan/kernel HLO census missing"
+    assert len(checked) == 6, \
+        "gcn/gat x scan/kernel/reorder HLO census missing"
     for rec in checked:
         _, c = _compiled(rec["model"], 2)
         static = A.exchange_census(c.schedule(rec["dispatch"])).n_collectives

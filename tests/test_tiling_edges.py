@@ -89,7 +89,7 @@ def test_padded_zero_edge_tiles_execute_correctly():
 
 def test_registry_zero_edge_graph_keeps_one_filler_tile():
     reg = ShapeRegistry()
-    padded, tiles, e_rows = reg.canonical(("k",), _zero_edge())
+    padded, tiles, e_rows, _ = reg.canonical(("k",), _zero_edge())
     assert tiles.n_tiles >= 1          # kernels always see a non-empty grid
     assert int(tiles.n_edge.sum()) == 0
     assert e_rows >= 1                 # edge-input rows padded to >= 1
@@ -98,7 +98,7 @@ def test_registry_zero_edge_graph_keeps_one_filler_tile():
 
 def test_registry_single_vertex_graph():
     reg = ShapeRegistry()
-    padded, tiles, e_rows = reg.canonical(("k",), _single_vertex())
+    padded, tiles, e_rows, _ = reg.canonical(("k",), _single_vertex())
     assert padded.n_vertices >= 1
     assert int(tiles.n_edge.sum()) == 1
 
@@ -108,11 +108,11 @@ def test_registry_exact_shape_no_growth():
     not bump the class (no recompile): signatures stay identical."""
     reg = ShapeRegistry()
     g = graphs.random_graph(40, 160, seed=0)
-    _, t1, e1 = reg.canonical(("k",), g)
+    _, t1, e1, _ = reg.canonical(("k",), g)
     entry = dict(reg._shapes[("k",)])
     # a graph realizing the registered v_pad exactly (equality, not excess)
     g2 = graphs.random_graph(entry["v_pad"], 160, seed=1)
-    _, t2, e2 = reg.canonical(("k",), g2)
+    _, t2, e2, _ = reg.canonical(("k",), g2)
     assert reg._shapes[("k",)]["v_pad"] == entry["v_pad"]
     assert t2.shape_signature() == t1.shape_signature()
     assert e2 == e1
