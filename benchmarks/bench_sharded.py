@@ -85,8 +85,10 @@ def run_device_scaling(smoke: bool):
     base = rows[0]["wall_s"]
     for r in rows:
         r["vs_1dev"] = round(base / r["wall_s"], 3)
-    # CPU shards share one socket: assert the sharded path stays within a
-    # sane overhead envelope instead of pretending a hardware speedup
+        # CPU shards share one socket: these rows measure shard_map + exchange
+        # OVERHEAD, so they carry this tag and are excluded from every speedup
+        # assertion — the speedup axis is the simulated chip curve
+        r["host_shared_silicon"] = True
     checks = {r["n_dev"]: r["checksum"] for r in rows}
     assert all(abs(v - rows[0]["checksum"]) < 1e-2 * max(1.0, abs(rows[0]["checksum"]))
                for v in checks.values()), f"device counts disagree: {checks}"
@@ -112,16 +114,82 @@ def run_chip_scaling(smoke: bool):
                               "speedup": 1.0, "exchange_cycles": 0,
                               "balance": 1.0})
                 continue
-            r = simulator.simulate_sharded(sde, ts, n_chips=k)
+            r = simulator.simulate_sharded(sde, ts, n_chips=k, mode="mincut",
+                                           exchange="restricted")
+            ag = simulator.simulate_sharded(sde, ts, n_chips=k, mode="cost",
+                                            exchange="allgather")
             curve.append({"n_chips": k, "cycles": r.cycles,
                           "speedup": round(base.cycles / r.cycles, 3),
                           "exchange_cycles": r.exchange_cycles,
+                          "exchange_bytes": r.exchange_bytes,
+                          "edge_cut_rows": r.edge_cut_rows,
+                          "allgather_bytes": ag.exchange_bytes,
                           "balance": round(r.balance, 3)})
         out[name] = curve
         # scaling sanity: more chips never loses to fewer on this config
         cyc = [c_["cycles"] for c_ in curve]
         assert all(b <= a for a, b in zip(cyc, cyc[1:])), (name, cyc)
     return out
+
+
+def run_exchange_gate(smoke: bool):
+    """ISSUE 10 acceptance gate: on the cit-Patents-like graph the mincut
+    plan's restricted exchange ships FEWER bytes than the all-gather
+    baseline on all five models at 4 and 8 chips, without giving up the
+    reported load balance (per-model mincut balance <= max(all-gather
+    balance, 1.244) at 8 chips)."""
+    from repro.core import compiler, isa, simulator, tiling
+    from repro.gnn import graphs, models
+
+    g = graphs.paper_graph("cit-Patents", scale=0.001, seed=0, n_edge_types=3)
+    ts = tiling.grid_tile(g, 8, 8, sparse=True)
+    rows = []
+    for name in models.PAPER_MODELS:
+        c = compiler.compile_gnn(models.trace_stacked(name, 2, 16, 16, 16))
+        sde = isa.emit_sde(c.schedule(False))
+        for k in (4, 8):
+            mc = simulator.simulate_sharded(sde, ts, n_chips=k, mode="mincut",
+                                            exchange="restricted")
+            ag = simulator.simulate_sharded(sde, ts, n_chips=k, mode="cost",
+                                            exchange="allgather")
+            row = {"model": name, "n_chips": k,
+                   "restricted_bytes": mc.exchange_bytes,
+                   "allgather_bytes": ag.exchange_bytes,
+                   "edge_cut_rows": mc.edge_cut_rows,
+                   "balance": round(mc.balance, 3),
+                   "allgather_balance": round(ag.balance, 3)}
+            rows.append(row)
+            assert mc.exchange_bytes <= ag.exchange_bytes, row
+            if k == 8:
+                assert mc.balance <= max(ag.balance, 1.244), row
+    return rows
+
+
+def run_planner_comparison(smoke: bool):
+    """LPT vs mincut shard planning on a finer grid (P=32), where the
+    refinement has real freedom: the cut shrinks at EQUAL balance
+    tolerance.  Plan-level metrics only — the planner is model-agnostic."""
+    from repro.core import tiling
+    from repro.gnn import graphs
+
+    g = graphs.paper_graph("cit-Patents", scale=0.001, seed=0, n_edge_types=3)
+    ts = tiling.grid_tile(g, 32, 32, sparse=True)
+    rows = []
+    for k in (4, 8):
+        lpt = tiling.plan_shards(ts, k, mode="cost")
+        mc = tiling.plan_shards(ts, k, mode="mincut")
+        lc, mcc = lpt.shard_costs(), mc.shard_costs()
+        rows.append({
+            "n_shards": k, "n_parts": ts.n_dst_parts,
+            "lpt_edge_cut": lpt.edge_cut(), "mincut_edge_cut": mc.edge_cut(),
+            "cut_reduction": round(1 - mc.edge_cut() / max(1, lpt.edge_cut()), 4),
+            "lpt_cost_balance": round(float(lc.max() / max(1, lc.mean())), 4),
+            "mincut_cost_balance": round(float(mcc.max() / max(1, mcc.mean())), 4),
+            "lpt_cut_rows": tiling.exchange_sets(ts, lpt).cut_rows,
+            "mincut_cut_rows": tiling.exchange_sets(ts, mc).cut_rows,
+        })
+        assert rows[-1]["mincut_edge_cut"] <= rows[-1]["lpt_edge_cut"], rows[-1]
+    return rows
 
 
 def run_autotuned(smoke: bool):
@@ -153,6 +221,23 @@ def main(argv=None):
     print("simulated chip scaling (2-layer, cit-Patents-like, speedup vs 1 chip)")
     print(fmt_table(rows, ["model"] + [f"{k}ch" for k in CHIP_COUNTS]))
 
+    gate = run_exchange_gate(args.smoke)
+    print("\nrestricted mincut exchange vs all-gather (bytes/boundary)")
+    print(fmt_table([[r["model"], r["n_chips"], r["restricted_bytes"],
+                      r["allgather_bytes"], r["edge_cut_rows"], r["balance"]]
+                     for r in gate],
+                    ["model", "chips", "restricted", "allgather",
+                     "cut rows", "balance"]))
+
+    planner = run_planner_comparison(args.smoke)
+    print("\nshard planner comparison (P=32, LPT vs mincut)")
+    print(fmt_table([[r["n_shards"], r["lpt_edge_cut"], r["mincut_edge_cut"],
+                      f"{100 * r['cut_reduction']:.1f}%",
+                      r["mincut_cost_balance"]]
+                     for r in planner],
+                    ["shards", "lpt cut", "mincut cut", "reduction",
+                     "balance"]))
+
     tuned = run_autotuned(args.smoke)
     print("\nautotuned kernel dispatch vs incumbents (power-law, padded cycles)")
     print(fmt_table([[r["model"], r["scan_default"], r["kernel_default"],
@@ -170,7 +255,8 @@ def main(argv=None):
                         ["devices", "ms", "vs 1dev"]))
 
     path = write_report("bench_sharded", {
-        "chip_scaling": chips, "device_scaling": devices,
+        "chip_scaling": chips, "exchange_gate": gate,
+        "planner_comparison": planner, "device_scaling": devices,
         "autotuned": tuned, "smoke": args.smoke,
     })
     print(f"\nreport: {path}")

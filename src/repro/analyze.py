@@ -88,7 +88,10 @@ def render_codes_doc() -> str:
          "`verify_exchange`)",
          "Races and collective structure over stream-task graphs: drain "
          "ordering, barrier coverage, the exactly-one-collective-per-layer "
-         "census, gather taint of exchanged values."),
+         "census, gather taint of exchanged values, and the "
+         "restricted-exchange coverage proof (every cross-shard source "
+         "read in its owner's send set, `recvDst` rows device-local, "
+         "send sets owned by their shard)."),
     )
     lines = [
         "# Diagnostics catalog",

@@ -58,6 +58,10 @@ CODES: Dict[str, tuple] = {
     "ZH204": (ERROR, "static exchange census disagrees with layer count"),
     "ZH205": (WARN, "exchanged value is not gather-tainted"),
     "ZH206": (INFO, "cross-chip boundary reads covered by the exchange"),
+    "ZH207": (ERROR, "restricted exchange misses a cross-shard source read"),
+    "ZH208": (ERROR, "recvDst read is not device-local under the shard plan"),
+    "ZH209": (ERROR, "exchange send set holds rows the shard does not own"),
+    "ZH210": (INFO, "restricted-exchange coverage proven (cut vs all-gather)"),
 }
 
 

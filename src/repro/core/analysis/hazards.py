@@ -215,6 +215,10 @@ class ExchangeCensus:
     tainted: FrozenSet[int]                  # gather-tainted vertex nodes
     #: (phase level, "dst"|"gather", ids drained by that publish call)
     events: Tuple[Tuple[int, str, Tuple[int, ...]], ...]
+    #: vertex node ids drained per *merged* collective, in execution order
+    #: (len == n_collectives); the last group is the output drain, the rest
+    #: are layer boundaries — the simulator takes per-boundary widths here
+    groups: Tuple[Tuple[int, ...], ...] = ()
 
 
 def exchange_census(sp: S.ScheduledProgram) -> ExchangeCensus:
@@ -255,24 +259,43 @@ def exchange_census(sp: S.ScheduledProgram) -> ExchangeCensus:
             if drained:
                 stream.append((ph.level, "gather", drained))
     events = tuple(ev for ev in stream if ev != "work")
-    groups = 0
+    groups: List[Tuple[int, ...]] = []
     prev_was_pub = False
     for ev in stream:
         if ev == "work":
             prev_was_pub = False
         else:
+            ids = ev[2]
             if not prev_was_pub:
-                groups += 1
+                groups.append(tuple(ids))
+            else:
+                groups[-1] = groups[-1] + tuple(ids)
             prev_was_pub = True
-    return ExchangeCensus(n_collectives=groups,
+    return ExchangeCensus(n_collectives=len(groups),
                           publish=frozenset(publish),
-                          tainted=frozenset(tainted), events=events)
+                          tainted=frozenset(tainted), events=events,
+                          groups=tuple(groups))
 
 
-def verify_exchange(sp: S.ScheduledProgram) -> List[Diagnostic]:
+def verify_exchange(sp: S.ScheduledProgram, *, tiles=None, plan=None,
+                    n_shards: Optional[int] = None,
+                    mode: str = "mincut") -> List[Diagnostic]:
     """ZH204/ZH205: the census must come out at exactly one collective per
     layer (the boundary drains, plus the final output drain), and nothing
-    untainted may ride the exchange (it would be recomputed locally)."""
+    untainted may ride the exchange (it would be recomputed locally).
+
+    With ``tiles`` (plus either a :class:`~repro.core.tiling.ShardPlan` or
+    ``n_shards``/``mode`` to build one) the pass additionally proves the
+    *neighbor-restricted* exchange covers every read the sharded runner
+    performs: each cross-shard gather-source read must appear in its owning
+    shard's send set (ZH207), every ``recvDst`` accumulator row must be
+    device-local under the plan (ZH208), and send sets must hold only rows
+    their shard owns (ZH209).  A clean proof is recorded as a ZH210 info
+    with the cut-vs-all-gather row counts.  The read sets are re-derived
+    per tile with explicit ``n_src`` slicing — a deliberately different
+    code path from :func:`repro.core.tiling.exchange_sets`, so the checker
+    never trusts the builder it is checking.
+    """
     census = exchange_census(sp)
     diags: List[Diagnostic] = []
     if census.n_collectives != sp.n_layers:
@@ -287,4 +310,123 @@ def verify_exchange(sp: S.ScheduledProgram) -> List[Diagnostic]:
             "ZH205", f"exchanged value %{nid} is not gather-tainted; "
                      f"source replicas could recompute it locally",
             node=nid, origin="census"))
+    if tiles is not None:
+        diags += _verify_exchange_coverage(tiles, plan=plan,
+                                           n_shards=n_shards, mode=mode)
+    return diags
+
+
+_MAX_COVERAGE_DIAGS = 8      # cap per-code emission; totals go in the message
+
+
+def _verify_exchange_coverage(tiles, *, plan=None,
+                              n_shards: Optional[int] = None,
+                              mode: str = "mincut") -> List[Diagnostic]:
+    """Statically prove the restricted exchange covers every sharded read."""
+    from ..tiling import BucketedTileSet, exchange_sets, plan_shards
+
+    if plan is None:
+        if n_shards is None:
+            raise ValueError(
+                "exchange coverage proof needs plan= or n_shards=")
+        plan = plan_shards(tiles, n_shards, mode=mode)
+    ex = exchange_sets(tiles, plan)
+    K = plan.n_shards
+    part_start = np.asarray(tiles.part_start)
+    part_size = np.asarray(tiles.part_size)
+    send_sets = [frozenset(map(int, rows)) for rows in ex.send_rows]
+    diags: List[Diagnostic] = []
+
+    # ZH208 (plan side): every partition must be assigned to exactly one
+    # shard, consistently between parts_of_shard and shard_of_part — else a
+    # recvDst accumulator would be gathered on one device and read on another
+    seen_parts: Set[int] = set()
+    for k, ps in enumerate(plan.parts_of_shard):
+        for p in map(int, ps):
+            if p in seen_parts or int(plan.shard_of_part[p]) != k:
+                diags.append(Diagnostic(
+                    "ZH208", f"partition {p} assignment inconsistent: listed "
+                             f"under shard {k} but owned by shard "
+                             f"{int(plan.shard_of_part[p])}",
+                    origin="census"))
+            seen_parts.add(p)
+
+    # ZH209: a shard's send set may hold only rows it owns (ownership
+    # re-derived from the destination partition ranges)
+    n209 = 0
+    for k, rows in enumerate(ex.send_rows):
+        if len(rows) == 0:
+            continue
+        owner = plan.shard_of_part[
+            np.searchsorted(part_start, rows, side="right") - 1]
+        bad = owner != k
+        for r, o in zip(map(int, np.asarray(rows)[bad]),
+                        map(int, owner[bad])):
+            n209 += 1
+            if n209 <= _MAX_COVERAGE_DIAGS:
+                diags.append(Diagnostic(
+                    "ZH209", f"shard {k} send set holds row {r} owned by "
+                             f"shard {o}", origin="census"))
+
+    # ZH207/ZH208 (tile side): walk every tile with explicit n_src/n_edge
+    # slicing and demand each cross-shard source read is in the owner's
+    # send set, and each dst accumulator offset stays inside the partition
+    n207 = n208 = 0
+    cross_slots = 0
+
+    def walk(ts) -> None:
+        nonlocal n207, n208, cross_slots
+        part_id = np.asarray(ts.part_id)
+        for t in range(ts.n_tiles):
+            p = int(part_id[t])
+            k = int(plan.shard_of_part[p])
+            ne = int(ts.n_edge[t])
+            if ne:
+                off = np.asarray(ts.edge_dst[t, :ne])
+                bad = off[(off < 0) | (off >= int(part_size[p]))]
+                for o in map(int, bad[:_MAX_COVERAGE_DIAGS]):
+                    n208 += 1
+                    if n208 <= _MAX_COVERAGE_DIAGS:
+                        diags.append(Diagnostic(
+                            "ZH208", f"tile {t} dst offset {o} escapes "
+                                     f"partition {p} (size "
+                                     f"{int(part_size[p])}); its recvDst "
+                                     f"row is not local to shard {k}",
+                            block="dst", origin="census"))
+            rows = np.asarray(ts.src_ids[t, :int(ts.n_src[t])])
+            owners = plan.shard_of_part[
+                np.searchsorted(part_start, rows, side="right") - 1]
+            remote = owners != k
+            cross_slots += int(remote.sum())
+            for r, o in zip(map(int, rows[remote]), map(int, owners[remote])):
+                if r not in send_sets[o]:
+                    n207 += 1
+                    if n207 <= _MAX_COVERAGE_DIAGS:
+                        diags.append(Diagnostic(
+                            "ZH207", f"shard {k} reads row {r} owned by "
+                                     f"shard {o} but the row is missing "
+                                     f"from shard {o}'s send set",
+                            block="gather", origin="census"))
+
+    if isinstance(tiles, BucketedTileSet):
+        for b in tiles.buckets:
+            walk(b)
+    else:
+        walk(tiles)
+
+    for code, n in (("ZH207", n207), ("ZH208", n208), ("ZH209", n209)):
+        if n > _MAX_COVERAGE_DIAGS:
+            diags.append(Diagnostic(
+                code, f"... {n - _MAX_COVERAGE_DIAGS} further finding(s) "
+                      f"of this code suppressed ({n} total)",
+                origin="census"))
+    if n207 == n208 == n209 == 0 and not diags:
+        allgather_rows = tiles.n_vertices * max(0, K - 1)
+        diags.append(Diagnostic(
+            "ZH210", f"restricted-exchange coverage proven for "
+                     f"{plan.mode!r} plan over {K} shard(s): "
+                     f"{cross_slots} cross-shard read slot(s) covered by "
+                     f"{ex.cut_rows} shipped row(s)/boundary "
+                     f"(all-gather would ship {allgather_rows})",
+            origin="census"))
     return diags

@@ -147,6 +147,11 @@ class SDEFunctions:
     #: tile edge layout the templates were emitted for ("coo" | "csr") —
     #: the stream builder keys the edge-index traffic model on it
     layout: str = "coo"
+    #: feature width drained at each interior layer boundary, in execution
+    #: order (len == n_layers - 1); derived from the static exchange census,
+    #: empty when the census is unclean (the simulator then falls back to
+    #: ``max(src_load_dim, out_dim)`` for every boundary)
+    boundary_dims: Tuple[int, ...] = ()
 
     def all_levels(self):
         return range(self.max_level + 1)
@@ -219,10 +224,26 @@ def emit_sde(plan: Union[SDEPlan, "object"], fuse: bool = True,
                         fused.append(ins)
                 bucket[lvl] = fused
 
+    # per-boundary drained widths from the static exchange census: each
+    # interior merged collective ships the sum of its drained nodes' dims
+    # (stacks with mixed hidden widths cost each boundary its own width).
+    # Import is deferred — analysis.hazards imports streams which imports
+    # this module, so it must not run at isa import time.
+    from .analysis.hazards import exchange_census
+
+    census = exchange_census(sp)
+    boundary_dims: Tuple[int, ...] = ()
+    if census.n_collectives == sp.n_layers:
+        dim_of = {n.id: n.dim for seg in sp.prog.segments
+                  for n in seg.nodes.values()}
+        boundary_dims = tuple(
+            sum(dim_of.get(nid, 0) for nid in grp)
+            for grp in census.groups[:-1])
+
     return SDEFunctions(s=s, e=e, d=d,
                         src_load_dim=sp.src_load_dim,
                         dst_load_dim=sp.dst_load_dim,
                         edge_feat_dim=sp.edge_feat_dim, out_dim=sp.out_dim,
                         max_level=sp.max_level,
                         level_layer=sp.layer_of_level(), n_layers=sp.n_layers,
-                        layout=layout)
+                        layout=layout, boundary_dims=boundary_dims)

@@ -37,7 +37,8 @@ import numpy as np
 from . import compiler as C
 from . import schedule as S
 from .executor import apply_compute, _NEG_INF
-from .tiling import BucketedTileSet, ShardPlan, TileSet, plan_shards
+from .tiling import (BucketedTileSet, ShardPlan, TileSet, exchange_sets,
+                     plan_shards)
 from ..gnn.graphs import Graph
 
 Array = Any
@@ -549,10 +550,20 @@ def _shard_real_counts(ts: TileSet, plan: ShardPlan) -> List[int]:
     return [int(np.sum(real & (shard == k))) for k in range(plan.n_shards)]
 
 
+def _exchange_cap(tiles, plan: ShardPlan, quantize_tile_cap: bool) -> int:
+    """Static send-buffer capacity of the restricted boundary exchange:
+    the largest per-shard send set (rows a shard owns that remote shards'
+    gather blocks read), power-of-two quantized under serving's cap
+    quantization so small per-request variance shares one compiled shape."""
+    cap = max(1, exchange_sets(tiles, plan).max_send)
+    return _quantize_cap(cap) if quantize_tile_cap else cap
+
+
 def shard_layout_signature(tiles, n_devices: int, mode: str = "cost",
                            quantize_tile_cap: bool = False,
                            kernel_dispatch: bool = False,
-                           kernels: Tuple[str, ...] = ()) -> Tuple:
+                           kernels: Tuple[str, ...] = (),
+                           model_axis: int = 1) -> Tuple:
     """Shape identity of the sharded execution layout — everything a
     :class:`ShardedRunner` compilation depends on beyond the program and
     tile-set signatures.  Cheap (pure numpy); the serving engine calls it
@@ -562,7 +573,10 @@ def shard_layout_signature(tiles, n_devices: int, mode: str = "cost",
     ``kernel_dispatch`` (and, when it is on, the program's kernel tags) is
     part of the identity: a scan-scheduled compilation must never alias a
     kernel-dispatched one, and the segment-softmax kernel adds a per-shard
-    capacity for the unbucketed tile batch that scan programs don't have."""
+    capacity for the unbucketed tile batch that scan programs don't have.
+    Multi-shard layouts append the restricted-exchange send capacity
+    (:func:`_exchange_cap`); ``model_axis`` names the 2-D mesh's feature
+    axis width — a different feature split never aliases."""
     plan = plan_shards(tiles, n_devices, mode=mode)
     caps = []
     for counts in _shard_tile_counts(tiles, plan):
@@ -571,8 +585,10 @@ def shard_layout_signature(tiles, n_devices: int, mode: str = "cost",
     if kernel_dispatch and S.KERNEL_SEGMENT_SOFTMAX in kernels:
         cap0 = max(1, max(_shard_real_counts(_source_tileset(tiles), plan)))
         caps.append(_quantize_cap(cap0) if quantize_tile_cap else cap0)
-    return ("shardlayout", n_devices, mode, plan.n_local_parts, tuple(caps),
-            bool(kernel_dispatch))
+    if n_devices > 1:
+        caps.append(_exchange_cap(tiles, plan, quantize_tile_cap))
+    return ("shardlayout", n_devices, mode, int(model_axis),
+            plan.n_local_parts, tuple(caps), bool(kernel_dispatch))
 
 
 def _shard_partition_ids(plan: ShardPlan, part_start: np.ndarray,
@@ -685,6 +701,28 @@ def _shard_layout(tiles, plan: ShardPlan, quantize_tile_cap: bool,
         caps.append(cap0)
         shard_ops["softmax"] = shard_stack(st, cap0, None)
     repl_ops = {"full_pad_ids": pad_ids.reshape(-1).copy()}
+    if K > 1:
+        # restricted-exchange send sets: per shard, the flat local-buffer
+        # slots of the rows it owns that remote shards' gather blocks read,
+        # and the replicated global-id table the receive scatter uses
+        # (sentinel n_vertices rows are dropped).  Interior boundary
+        # publishes all-gather only this compacted buffer.
+        ex = exchange_sets(tiles, plan)
+        ecap = max(1, ex.max_send)
+        if quantize_tile_cap:
+            ecap = _quantize_cap(ecap)
+        caps.append(ecap)
+        part_start = np.asarray(tiles.part_start)
+        send_slots = np.zeros((K, ecap), np.int32)
+        send_ids = np.full((K, ecap), tiles.n_vertices, np.int32)
+        for k, rows in enumerate(ex.send_rows):
+            part = np.searchsorted(part_start, rows, side="right") - 1
+            slots = (plan.local_slot_of_part[part].astype(np.int64) * dmax
+                     + (rows - part_start[part]))
+            send_slots[k, :len(rows)] = slots.astype(np.int32)
+            send_ids[k, :len(rows)] = rows.astype(np.int32)
+        shard_ops["send_slots"] = send_slots
+        repl_ops["send_ids"] = send_ids.reshape(-1).copy()
     return shard_ops, repl_ops, tuple(caps)
 
 
@@ -715,11 +753,30 @@ class ShardedRunner:
     first jax import.
 
     ``mode`` picks the partition assignment (``"cost"``: LPT-balanced padded
-    edge cost; ``"contiguous"``: even ranges — deterministic across requests,
-    what serving uses), ``quantize_tile_cap=True`` rounds per-shard tile
-    capacities to powers of two so structurally-similar requests share one
-    compiled shape.  Like :class:`PipelinedRunner`, compilation depends only
-    on :attr:`signature`; :meth:`bind`/:meth:`run_with` re-derive operands
+    edge cost; ``"mincut"``: LPT seed + deterministic KL-style refinement
+    minimizing cross-shard source reads; ``"contiguous"``: even ranges —
+    deterministic across requests, what serving uses),
+    ``quantize_tile_cap=True`` rounds per-shard tile capacities to powers of
+    two so structurally-similar requests share one compiled shape.
+
+    Interior layer boundaries use a *neighbor-restricted* exchange: each
+    shard all-gathers only its compacted send buffer — the rows remote
+    shards' gather blocks actually read, a static per-shard set derived from
+    the plan (:func:`~repro.core.tiling.exchange_sets`) — and scatters its
+    own partitions' rows locally.  Only the final output drain (whose
+    results must be replicated on every shard) ships the full padded
+    layout.  :func:`~repro.core.analysis.hazards.verify_exchange` proves
+    coverage statically.
+
+    ``model_axis=M > 1`` grows the mesh to 2-D ``("shards", "model")`` over
+    ``n_devices * M`` devices: compute is replicated over the model axis
+    while every boundary exchange ships each rank's ``ceil(F / M)`` feature
+    slice over the shards axis and reassembles full width with one tiled
+    model-axis all-gather — for wide hidden dims the per-link payload
+    shrinks by ``M``.
+
+    Like :class:`PipelinedRunner`, compilation depends only on
+    :attr:`signature`; :meth:`bind`/:meth:`run_with` re-derive operands
     for a different same-signature tile set through the warm compilation.
     """
 
@@ -729,17 +786,20 @@ class ShardedRunner:
                  devices: Optional[List] = None,
                  tile_kernel: Optional[Callable] = None,
                  kernel_dispatch: Optional[bool] = None,
-                 reordering=None):
+                 reordering=None, model_axis: int = 1):
         from ..kernels.tile_spmm import ops as tops
 
         devices = list(devices) if devices is not None else list(jax.devices())
+        if model_axis < 1:
+            raise ValueError(f"model_axis must be >= 1, got {model_axis}")
         if n_devices is None:
-            n_devices = len(devices)
-        if n_devices > len(devices):
+            n_devices = max(1, len(devices) // model_axis)
+        if n_devices * model_axis > len(devices):
             raise ValueError(
-                f"n_devices={n_devices} but only {len(devices)} jax devices "
-                "are visible; on CPU set XLA_FLAGS="
-                "--xla_force_host_platform_device_count=N before importing jax")
+                f"n_devices={n_devices} x model_axis={model_axis} but only "
+                f"{len(devices)} jax devices are visible; on CPU set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+                "importing jax")
         if kernel_dispatch is None:
             kernel_dispatch = tile_kernel is not None
         self.c = compiled
@@ -751,6 +811,7 @@ class ShardedRunner:
         self.mode = mode
         self.quantize_tile_cap = quantize_tile_cap
         self.n_devices = n_devices
+        self.model_axis = int(model_axis)
         self.tile_kernel = tile_kernel if tile_kernel is not None else tops.spmm
         self.csr_kernel = tops.spmm_csr
         self.softmax_kernel = tops.gat_aggregate
@@ -774,9 +835,16 @@ class ShardedRunner:
         self._signature = ("sharded", n_devices, mode, self.plan.n_local_parts,
                            self.caps, self.kernel_dispatch,
                            self.sp.structure_signature(),
-                           tiles.shape_signature(), self.reorder_mode)
-        self.mesh = jax.sharding.Mesh(np.asarray(devices[:n_devices]),
-                                      ("shards",))
+                           tiles.shape_signature(), self.reorder_mode,
+                           self.model_axis)
+        if self.model_axis > 1:
+            grid = np.asarray(
+                devices[:n_devices * self.model_axis]).reshape(
+                    n_devices, self.model_axis)
+            self.mesh = jax.sharding.Mesh(grid, ("shards", "model"))
+        else:
+            self.mesh = jax.sharding.Mesh(np.asarray(devices[:n_devices]),
+                                          ("shards",))
         P = jax.sharding.PartitionSpec
         from ..jax_compat import shard_map
         self._jitted = jax.jit(shard_map(
@@ -930,19 +998,56 @@ class ShardedRunner:
         pstore: Dict[int, Array] = {}
         dstore: Dict[int, Array] = {}
 
+        M = self.model_axis
+
+        def mesh_gather(buf: Array) -> Array:
+            """All-gather over the shards axis; under a 2-D mesh each model
+            rank ships only its ceil(F / M) column slice and one tiled
+            model-axis all-gather reassembles full width."""
+            if M == 1:
+                return jax.lax.all_gather(buf, "shards", axis=0)
+            W = buf.shape[-1]
+            wp = -(-W // M)
+            pad = [(0, 0)] * (buf.ndim - 1) + [(0, wp * M - W)]
+            bufp = jnp.pad(buf, pad)
+            m = jax.lax.axis_index("model")
+            chunk = jax.lax.dynamic_slice_in_dim(bufp, m * wp, wp, axis=-1)
+            full = jax.lax.all_gather(chunk, "shards", axis=0)
+            full = jax.lax.all_gather(full, "model", axis=full.ndim - 1,
+                                      tiled=True)
+            return full[..., :W]
+
         def publish(pending: Dict[int, Array]) -> None:
             """Exchange device-local padded values into the replicated flat
-            (V, F) store: ONE all-gather for everything this phase drains."""
+            (V, F) store: ONE shards-axis all-gather for everything this
+            phase drains.  Interior boundaries ship only the compacted
+            restricted send buffer (rows remote shards' gather blocks read)
+            and scatter the shard's own rows locally; the final output
+            drain — whose values must come out replicated — gathers the
+            full padded layout."""
             if not pending:
                 return
             ids = list(pending)
             widths = [int(pending[i].shape[-1]) for i in ids]
             buf = jnp.concatenate([pending[i] for i in ids], axis=-1)
-            buf = jnp.where(pad_valid, buf, 0.0)
-            full = jax.lax.all_gather(buf, "shards", axis=0)  # (K,P_loc,Dmax,F)
-            flat = full.reshape(K * P_loc * dmax, -1)
-            store = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
-            store = store.at[full_ids].set(flat)[:V]
+            restricted = (K > 1 and "send_slots" in ops
+                          and not (set(ids) & set(sp.outputs)))
+            if restricted:
+                flatbuf = buf.reshape(P_loc * dmax, -1)
+                send = flatbuf[ops["send_slots"][0]]      # (C, F)
+                full = mesh_gather(send)                  # (K, C, F)
+                flat = full.reshape(full.shape[0] * full.shape[1], -1)
+                store = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
+                store = store.at[repl["send_ids"]].set(flat)
+                # own partitions' rows never ride the exchange: local scatter
+                # (invalid padded slots carry the sentinel V and are dropped)
+                store = store.at[pad_ids.reshape(-1)].set(flatbuf)[:V]
+            else:
+                buf = jnp.where(pad_valid, buf, 0.0)
+                full = mesh_gather(buf)                   # (K,P_loc,Dmax,F)
+                flat = full.reshape(K * P_loc * dmax, -1)
+                store = jnp.zeros((V + 1, flat.shape[-1]), jnp.float32)
+                store = store.at[full_ids].set(flat)[:V]
             off = 0
             for nid, w in zip(ids, widths):
                 vstore[nid] = store[:, off:off + w]

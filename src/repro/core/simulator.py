@@ -19,6 +19,8 @@ import heapq
 import math
 from typing import Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .isa import Instr
 from .streams import HWConfig, Task, build_task_graph, instr_cycles
 from .isa import SDEFunctions
@@ -218,6 +220,9 @@ class ShardedSimResult:
     exchange_bytes: int              # total cross-chip traffic
     n_exchanges: int
     chip_results: List[SimResult]
+    exchange: str = "restricted"     # exchange cost model used
+    model_axis: int = 1              # feature-axis mesh width (2-D mesh)
+    edge_cut_rows: int = 0           # rows the restricted exchange ships/boundary
 
     def speedup_over(self, other) -> float:
         return other.time_ms / self.time_ms
@@ -229,56 +234,128 @@ class ShardedSimResult:
         return max(self.per_chip_cycles) / max(mean, 1.0)
 
 
+def _scale_sde_model(sde: SDEFunctions, m: int) -> SDEFunctions:
+    """Column-parallel feature split for the 2-D mesh's ``model`` axis: each
+    of ``m`` ranks computes a ``ceil(n / m)``-wide slice of every
+    instruction's output lanes (contractions keep their full ``krows``) and
+    loads/stores its slice of the vertex features."""
+    def sdim(n: int) -> int:
+        return max(1, -(-int(n) // m))
+
+    def scale(bucket):
+        return {lvl: [dataclasses.replace(i, n=sdim(i.n)) for i in instrs]
+                for lvl, instrs in bucket.items()}
+
+    return dataclasses.replace(
+        sde, s=scale(sde.s), e=scale(sde.e), d=scale(sde.d),
+        src_load_dim=sdim(sde.src_load_dim),
+        dst_load_dim=sdim(sde.dst_load_dim), out_dim=sdim(sde.out_dim))
+
+
 def simulate_sharded(sde: SDEFunctions, tiles: TileSet,
                      hw: Optional[HWConfig] = None, n_chips: int = 2,
                      padded: bool = False, inter_layer: str = "pipelined",
                      mode: str = "cost",
-                     exchange_dim: Optional[int] = None) -> ShardedSimResult:
+                     exchange_dim: Optional[int] = None,
+                     exchange: str = "restricted",
+                     model_axis: int = 1) -> ShardedSimResult:
     """Cost a sharded execution over ``n_chips`` chips, each owning whole
     destination partitions (:func:`~repro.core.tiling.plan_shards`).
 
     Each chip's task graph (its partitions only) runs through the
     event-driven simulator independently; chips synchronize at the
-    ``n_layers - 1`` layer boundaries, where the drained layer output — one
-    row per destination vertex, ``out_dim`` wide — is all-gathered over the
-    chip-to-chip links (ring model: each link carries ``(K-1)/K`` of the
-    full buffer).  Final outputs are written to each chip's own HBM
-    (already costed as task ``bytes_out``), so they add no exchange.
+    ``n_layers - 1`` layer boundaries.  Per-boundary drained widths come
+    from the static exchange census (``sde.boundary_dims``) so stacks with
+    mixed hidden widths cost each boundary its own width;
+    ``exchange_dim`` overrides them all, and the pre-census fallback is
+    ``max(src_load_dim, out_dim)``.  Final outputs are written to each
+    chip's own HBM (already costed as task ``bytes_out``), so they add no
+    exchange.
 
-    A boundary drains the *hidden*-layer width, not the output head's:
-    ``exchange_dim`` overrides the per-row width when known; the default
-    takes ``max(src_load_dim, out_dim)`` — the source-input width tracks
-    the model's feature width, so a narrow classification head does not
-    under-cost the exchange.
+    ``exchange`` picks the boundary-collective cost model:
+
+    * ``"restricted"`` — the neighbor-restricted exchange: each shard ships
+      only the rows remote shards' gather blocks actually read
+      (:func:`~repro.core.tiling.exchange_sets`), costed by actual cut
+      bytes; per-boundary cycles are the busiest chip's max of send/recv
+      bytes over the link bandwidth.
+    * ``"allgather"`` — the concat all-gather baseline: every chip receives
+      every row (ring model: each link carries ``(K-1)/K`` of the buffer).
+
+    ``model_axis=M > 1`` grows the mesh to 2-D ``("shards", "model")`` for
+    wide hidden dims: per-chip compute and the shards-axis exchange width
+    shrink to the rank's ``ceil(width / M)`` feature slice, and each
+    boundary additionally pays a model-axis gather reassembling full-width
+    rows for the next layer's contraction.
     """
-    from .tiling import plan_shards
+    from .tiling import exchange_sets, plan_shards
 
+    if model_axis < 1:
+        raise ValueError(f"model_axis must be >= 1, got {model_axis}")
     hw = hw or HWConfig()
     plan = plan_shards(tiles, n_chips, mode=mode)
+    sde_rank = _scale_sde_model(sde, model_axis) if model_axis > 1 else sde
     chips: List[SimResult] = []
     for k in range(n_chips):
-        tasks, stats = build_task_graph(sde, tiles, hw, padded=padded,
+        tasks, stats = build_task_graph(sde_rank, tiles, hw, padded=padded,
                                         inter_layer=inter_layer,
                                         parts=plan.parts_of_shard[k])
         chips.append(simulate(tasks, stats, hw))
 
-    n_exch = max(sde.n_layers - 1, 0) if n_chips > 1 else 0
-    dim = max(exchange_dim if exchange_dim is not None
-              else max(sde.src_load_dim, sde.out_dim), 1)
+    K, M = n_chips, model_axis
+    n_exch = max(sde.n_layers - 1, 0) if (K > 1 or M > 1) else 0
+    fallback = max(max(sde.src_load_dim, sde.out_dim), 1)
+    if exchange_dim is not None:
+        widths = [max(int(exchange_dim), 1)] * n_exch
+    elif len(sde.boundary_dims) == n_exch:
+        widths = [max(int(w), 1) for w in sde.boundary_dims]
+    else:
+        widths = [fallback] * n_exch
     rows = int(tiles.part_size.sum())
-    bytes_per_exch = rows * dim * hw.dtype_bytes
-    exch_cycles_each = int(math.ceil(
-        bytes_per_exch * (n_chips - 1) / max(n_chips, 1)
-        / hw.interconnect_bytes_per_cycle)) if n_exch else 0
-    exch_cycles = n_exch * exch_cycles_each
+    ex = exchange_sets(tiles, plan) if (K > 1 and exchange == "restricted") \
+        else None
+    if K > 1 and exchange not in ("restricted", "allgather"):
+        raise ValueError(f"unknown exchange cost model {exchange!r}")
+    bw = hw.interconnect_bytes_per_cycle
+    exch_cycles = 0
+    exch_bytes = 0
+    for w in widths:
+        wm = max(1, -(-w // M))                  # per-rank feature slice
+        if ex is not None:
+            out_b = ex.pair_rows.sum(axis=1) * wm * hw.dtype_bytes
+            in_b = ex.pair_rows.sum(axis=0) * wm * hw.dtype_bytes
+            busiest = int(np.maximum(out_b, in_b).max()) if K > 1 else 0
+            exch_cycles += int(math.ceil(busiest / bw))
+            exch_bytes += ex.cut_rows * wm * hw.dtype_bytes * M
+        elif K > 1:
+            full = rows * wm * hw.dtype_bytes
+            exch_cycles += int(math.ceil(full * (K - 1) / K / bw))
+            exch_bytes += full * (K - 1) * M
+        if M > 1:
+            # model-axis reassembly: each rank gathers the other (M-1)
+            # slices of every row it will read next layer (all rows under
+            # all-gather; own + received rows under the restricted exchange)
+            if ex is not None:
+                need = np.bincount(ex.owner_of_row, minlength=K).astype(
+                    np.int64) + ex.pair_rows.sum(axis=0)
+                need_max = int(need.max())
+            else:
+                need_max = rows
+            mbytes = need_max * (w - wm) * hw.dtype_bytes
+            exch_cycles += int(math.ceil(mbytes * (M - 1) / M / bw))
+            exch_bytes += mbytes * K * M
+
     total = max(c.cycles for c in chips) + exch_cycles
     return ShardedSimResult(
         n_chips=n_chips, cycles=total,
         time_ms=total / (hw.freq_ghz * 1e6),
         per_chip_cycles=[c.cycles for c in chips],
         exchange_cycles=exch_cycles,
-        exchange_bytes=n_exch * bytes_per_exch * max(n_chips - 1, 0),
-        n_exchanges=n_exch, chip_results=chips)
+        exchange_bytes=int(exch_bytes),
+        n_exchanges=n_exch, chip_results=chips,
+        exchange=exchange if K > 1 else "local",
+        model_axis=model_axis,
+        edge_cut_rows=(ex.cut_rows if ex is not None else 0))
 
 
 def serialized_baseline(sde: SDEFunctions, tiles: TileSet,

@@ -52,6 +52,7 @@ _SHARD_LADDER = (1, 2, 4, 8)
 #: other choice (paper §5.3 degree sorting; CSR-within-tile edge storage)
 _REORDER_CHOICES = ("identity", "degree")
 _LAYOUT_CHOICES = ("coo", "csr")
+_SHARD_MODE_CHOICES = ("cost", "mincut")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,17 +66,22 @@ class TileConfig:
     reorder: str = "identity"
     #: within-tile edge storage ("coo" | "csr")
     layout: str = "coo"
+    #: shard planner ("cost" LPT | "mincut" locality refinement)
+    shard_mode: str = "cost"
 
     def __post_init__(self):
         if self.reorder not in _REORDER_CHOICES:
             raise ValueError(f"unknown reorder mode {self.reorder!r}")
         if self.layout not in _LAYOUT_CHOICES:
             raise ValueError(f"unknown tile layout {self.layout!r}")
+        if self.shard_mode not in _SHARD_MODE_CHOICES:
+            raise ValueError(f"unknown shard mode {self.shard_mode!r}")
 
-    def key(self) -> Tuple[int, int, int, int, str, str]:
+    def key(self) -> Tuple[int, int, int, int, str, str, str]:
         """Hashable identity used to dedupe trials during the search."""
         return (self.n_dst_parts, self.n_src_parts,
-                self.n_buckets, self.n_shards, self.reorder, self.layout)
+                self.n_buckets, self.n_shards, self.reorder, self.layout,
+                self.shard_mode)
 
     def to_dict(self) -> Dict[str, object]:
         """JSON-able field dict (inverse of :meth:`from_dict`)."""
@@ -153,7 +159,7 @@ def padded_cost(compiled: C.CompiledGNN, graph: Graph, cfg: TileConfig,
     sde = isa.emit_sde(compiled.schedule(kernel_dispatch), layout=cfg.layout)
     tiles, _ = build_tiles(graph, cfg)
     r = simulate_sharded(sde, tiles, hw or HWConfig(), n_chips=cfg.n_shards,
-                         padded=True)
+                         padded=True, mode=cfg.shard_mode)
     return Trial(config=cfg, cycles=int(r.cycles), balance=float(r.balance),
                  exchange_cycles=int(r.exchange_cycles))
 
@@ -191,6 +197,10 @@ def neighbors(cfg: TileConfig, graph: Graph, max_shards: int = 8,
     toggles = [("reorder", _REORDER_CHOICES)]
     if kernel_dispatch:
         toggles.append(("layout", _LAYOUT_CHOICES))
+    if cfg.n_shards > 1:
+        # the planner only matters on a real mesh: single-shard configs
+        # keep one canonical key instead of two aliased lattice points
+        toggles.append(("shard_mode", _SHARD_MODE_CHOICES))
     for field, choices in toggles:
         for alt in choices:
             if alt != getattr(cfg, field):
@@ -254,6 +264,7 @@ def confirm_wallclock(compiled: C.CompiledGNN, graph: Graph,
         n_dev = min(cfg.n_shards, n_dev_avail)
         if n_dev > 1:
             runner = ShardedRunner(compiled, ro.graph, tiles, n_dev,
+                                   mode=cfg.shard_mode,
                                    kernel_dispatch=kernel_dispatch,
                                    reordering=ro)
         else:
@@ -391,6 +402,7 @@ def tune_for_class(compiled: C.CompiledGNN, graph: Graph, class_key, *,
                              for g in ph.gathers} - {S.KERNEL_SCAN}))
         sig = shard_layout_signature(build_tiles(graph, cfg)[0],
                                      max(1, cfg.n_shards),
+                                     mode=cfg.shard_mode,
                                      kernel_dispatch=kernel_dispatch,
                                      kernels=tags)
         cache.put(program_key(compiled, kernel_dispatch), class_key, cfg,

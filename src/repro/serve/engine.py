@@ -83,6 +83,7 @@ class InferenceServer:
                  donate_inputs: Optional[bool] = None,
                  shard_devices: Optional[int] = None,
                  shard_min_vertices: int = 2048,
+                 shard_model_axis: int = 1,
                  tune_cache=None,
                  cache: Optional[ProgramCache] = None,
                  shapes: Optional[ShapeRegistry] = None,
@@ -106,6 +107,12 @@ class InferenceServer:
             shard_devices: route large classes over an N-device mesh.
             shard_min_vertices: padded-vertex threshold for the sharded
                 route.
+            shard_model_axis: feature-axis width of the sharded route's
+                2-D ``("shards", "model")`` mesh — ``M > 1`` splits each
+                boundary exchange into per-rank ``ceil(F / M)`` column
+                slices over ``shard_devices * M`` devices (wide hidden
+                dims); part of the cache key, so different splits never
+                alias.
             tune_cache: optional :class:`~repro.launch.autotune.TuneCache`
                 routing tuned classes onto tuned tile configs.
             cache: a shared :class:`ProgramCache` (multi-tenant serving);
@@ -135,6 +142,9 @@ class InferenceServer:
             import jax
             donate_inputs = jax.default_backend() != "cpu"
         self.donate_inputs = donate_inputs
+        if shard_model_axis < 1:
+            raise ValueError(
+                f"shard_model_axis must be >= 1, got {shard_model_axis}")
         if shard_devices is not None:
             import jax
             if shard_devices < 1:
@@ -142,14 +152,16 @@ class InferenceServer:
                     f"shard_devices must be >= 1, got {shard_devices}")
             # fail at configuration time, not when the first large batch
             # arrives hours into a serving session
-            if shard_devices > len(jax.devices()):
+            if shard_devices * shard_model_axis > len(jax.devices()):
                 raise ValueError(
-                    f"shard_devices={shard_devices} but only "
+                    f"shard_devices={shard_devices} x model_axis="
+                    f"{shard_model_axis} but only "
                     f"{len(jax.devices())} jax devices are visible; on CPU "
                     "set XLA_FLAGS=--xla_force_host_platform_device_count=N "
                     "before importing jax")
         self.shard_devices = shard_devices
         self.shard_min_vertices = shard_min_vertices
+        self.shard_model_axis = shard_model_axis
         self.tune_cache = tune_cache
         sp = self.compiled.schedule(self.kernel_dispatch)
         self._kernel_tags = tuple(sorted(
@@ -283,14 +295,16 @@ class InferenceServer:
                 shard_layout_signature(tiles, n_dev, mode="contiguous",
                                        quantize_tile_cap=True,
                                        kernel_dispatch=self.kernel_dispatch,
-                                       kernels=self._kernel_tags),
+                                       kernels=self._kernel_tags,
+                                       model_axis=self.shard_model_axis),
                 tuned_key)
             runner = self.cache.get_or_build(
                 key, lambda: ShardedRunner(self.compiled, ro.graph, tiles,
                                            n_dev, mode="contiguous",
                                            quantize_tile_cap=True,
                                            kernel_dispatch=self.kernel_dispatch,
-                                           reordering=ro),
+                                           reordering=ro,
+                                           model_axis=self.shard_model_axis),
                 owner=self.cache_owner)
             with self._stats_lock:
                 self._sharded_batches += 1

@@ -39,7 +39,7 @@ def _graph(v=200, e=800, seed=2):
 def test_tileconfig_and_trial_roundtrip():
     cfg = AT.TileConfig(16, 8, 2, 4)
     assert AT.TileConfig.from_dict(cfg.to_dict()) == cfg
-    assert cfg.key() == (16, 8, 2, 4, "identity", "coo")
+    assert cfg.key() == (16, 8, 2, 4, "identity", "coo", "cost")
     t = AT.padded_cost(_compiled("gcn")[1], _graph(), cfg)
     assert t.cycles > 0 and t.config is cfg
     assert t.to_dict()["config"] == cfg.to_dict()
@@ -50,13 +50,19 @@ def test_neighbors_step_one_ladder_rung_and_respect_caps():
     g = _graph()
     moves = AT.neighbors(cfg, g, max_shards=2)
     keys = {m.key() for m in moves}
-    assert (4, 8, 4, 1, "identity", "coo") in keys
-    assert (16, 8, 4, 1, "identity", "coo") in keys
-    assert (8, 8, 4, 2, "identity", "coo") in keys    # shards capped at 2...
-    assert (8, 8, 4, 4, "identity", "coo") not in keys  # ...so no 4-shard move
+    assert (4, 8, 4, 1, "identity", "coo", "cost") in keys
+    assert (16, 8, 4, 1, "identity", "coo", "cost") in keys
+    assert (8, 8, 4, 2, "identity", "coo", "cost") in keys  # shards cap at 2
+    assert (8, 8, 4, 4, "identity", "coo", "cost") not in keys  # no 4-shard
     # ...and one toggle per categorical dimension
-    assert (8, 8, 4, 1, "degree", "coo") in keys
-    assert (8, 8, 4, 1, "identity", "csr") in keys
+    assert (8, 8, 4, 1, "degree", "coo", "cost") in keys
+    assert (8, 8, 4, 1, "identity", "csr", "cost") in keys
+    # single-shard configs offer no planner toggle (the plan is a no-op)
+    assert not any(m.shard_mode == "mincut" for m in moves)
+    # ...but real meshes search the planner dimension too
+    sharded = AT.TileConfig(n_shards=2)
+    assert (8, 8, 4, 2, "identity", "coo", "mincut") in \
+        {m.key() for m in AT.neighbors(sharded, g, max_shards=2)}
     # the scan engine needs the dense per-tile adjacency: no CSR move there
     scan_moves = AT.neighbors(cfg, g, max_shards=2, kernel_dispatch=False)
     assert all(m.layout == "coo" for m in scan_moves)
@@ -64,6 +70,8 @@ def test_neighbors_step_one_ladder_rung_and_respect_caps():
     # every move changes exactly one dimension by one rung
     for m in moves:
         assert sum(a != b for a, b in zip(m.key(), cfg.key())) == 1
+    with pytest.raises(ValueError, match="unknown shard mode"):
+        AT.TileConfig(shard_mode="zigzag")
     # a tiny graph cannot tile onto more partitions than vertices
     tiny = graphs.random_graph(12, 30, seed=0)
     assert all(m.n_dst_parts <= 12 and m.n_src_parts <= 12

@@ -53,3 +53,33 @@ def test_sharded_conformance_property(name, n_layers, n_vertices, edge_factor,
                                  n_devices=min(4, len(jax.devices())))
     assert _rel_err(out_p[0], out_s[0]) < REL_TOL
     assert _rel_err(ref[0], out_s[0]) < REL_TOL
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_vertices=st.integers(40, 300),
+       edge_factor=st.integers(2, 8),
+       n_parts=st.integers(4, 24),
+       n_shards=st.sampled_from([2, 4, 8]),
+       balance_tol=st.sampled_from([1.0, 1.05, 1.2]),
+       seed=st.integers(0, 2**16))
+def test_mincut_never_worse_than_lpt_property(n_vertices, edge_factor,
+                                              n_parts, n_shards, balance_tol,
+                                              seed):
+    """Planner invariant: at EQUAL balance tolerance the mincut refinement's
+    cross-shard read cut never exceeds the LPT seed's (strictly-positive-
+    gain moves only), and its load cap is the same one LPT establishes."""
+    g = graphs.random_graph(n_vertices, n_vertices * edge_factor, seed=seed,
+                            model="powerlaw")
+    ts = tiling.grid_tile(g, n_parts, n_parts, sparse=True)
+    lpt = tiling.plan_shards(ts, n_shards, mode="cost",
+                             balance_tol=balance_tol)
+    mc = tiling.plan_shards(ts, n_shards, mode="mincut",
+                            balance_tol=balance_tol)
+    assert mc.edge_cut() <= lpt.edge_cut()
+    cap = max(int(lpt.shard_costs().max()),
+              int(np.ceil(balance_tol * lpt.part_cost.sum() / n_shards)))
+    assert int(mc.shard_costs().max()) <= cap
+    # every partition still owned exactly once after refinement
+    owned = np.concatenate([np.asarray(p, np.int64)
+                            for p in mc.parts_of_shard])
+    assert sorted(owned.tolist()) == list(range(ts.n_dst_parts))
